@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV. Sub-benchmarks: fig1 (approximation error), table1 (SVM suite),
+# fig2 (H0/1), rm_attn (the technique applied to attention), roofline
+# (dry-run derived terms).
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (  # noqa: WPS433 - runtime import keeps startup light
+        fig1_approx,
+        fig2_h01,
+        rm_attention_bench,
+        roofline_bench,
+        table1_svm,
+    )
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig1", fig1_approx.run),
+        ("table1", table1_svm.run),
+        ("fig2", fig2_h01.run),
+        ("rm_attn", rm_attention_bench.run),
+        ("roofline", roofline_bench.run),
+    ]
+    failed = False
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            failed = True
+            print(f"{name}/ERROR,0,0", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end training driver: train an LM on the synthetic Markov corpus
+with checkpointing + crash recovery, in EXACT or RM (paper) attention mode.
+
+Quick CPU run (a ~1M-param model, loss visibly dropping in ~50 steps):
+
+    PYTHONPATH=src python examples/train_lm.py --preset quick
+
+The ~100M-parameter configuration (same code path; takes hours on 1 CPU
+core, minutes on real accelerators):
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+
+import jax
+
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models.config import ModelConfig, RMAttentionConfig
+from repro.train.steps import TrainHyper
+from repro.train.trainer import Trainer
+
+PRESETS = {
+    # ~1.1M params: runs in ~1 min on this CPU container
+    "quick": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                  d_ff=256, vocab_size=512, seq=128, batch=8),
+    # ~10M params
+    "10m": dict(num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+                d_ff=1024, vocab_size=2048, seq=256, batch=8),
+    # ~100M params (GPT-2-small-ish)
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+                 d_ff=3072, vocab_size=8192, seq=512, batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quick", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--attention-mode", default="exact",
+                    choices=["exact", "rm"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}-{args.attention_mode}",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+        attention_mode=args.attention_mode,
+        rm=RMAttentionConfig(num_features=128, n_max=6),
+        tie_embeddings=True,
+    ).validate()
+    data = SyntheticLMDataset(vocab_size=p["vocab_size"], seq_len=p["seq"],
+                              global_batch=p["batch"])
+    hyper = TrainHyper(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                       total_steps=args.steps)
+    trainer = Trainer(cfg, hyper, data, ckpt_dir=args.ckpt_dir,
+                      log_every=max(args.steps // 20, 1))
+    state = trainer.train(args.steps)
+
+    first = trainer.metrics_log[0]["ce"]
+    last = trainer.metrics_log[-1]["ce"]
+    import math
+    uniform = math.log(p["vocab_size"])
+    print(f"\n[train_lm] ce: {first:.3f} -> {last:.3f} "
+          f"(uniform baseline {uniform:.3f}); "
+          f"{'LEARNED' if last < first - 0.3 else 'check hyperparams'}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.analysis.roofline import (
+    HW_V5E,
+    HardwareSpec,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+    model_flops,
+)
+
+__all__ = [
+    "HW_V5E",
+    "HardwareSpec",
+    "collective_bytes_from_hlo",
+    "roofline_from_compiled",
+    "model_flops",
+]

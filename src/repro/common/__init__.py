@@ -1,0 +1,19 @@
+"""Shared utilities: pytree helpers, dtype policy, PRNG discipline."""
+from repro.common.tree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path,
+    flatten_dict,
+    unflatten_dict,
+)
+from repro.common.dtypes import DTypePolicy, canonical_dtype
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_map_with_path",
+    "flatten_dict",
+    "unflatten_dict",
+    "DTypePolicy",
+    "canonical_dtype",
+]

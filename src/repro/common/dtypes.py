@@ -1,0 +1,45 @@
+"""Mixed-precision policy: params fp32, activations bf16 (configurable)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def canonical_dtype(name: str):
+    return {
+        "float32": jnp.float32,
+        "bfloat16": jnp.bfloat16,
+        "float16": jnp.float16,
+        "int8": jnp.int8,
+        "int32": jnp.int32,
+    }[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Which dtype each class of tensor uses.
+
+    ``param``: master weights; ``compute``: activations & matmul inputs;
+    ``accum``: reductions (attention normalizers, RM feature products, losses).
+    """
+
+    param: str = "float32"
+    compute: str = "bfloat16"
+    accum: str = "float32"
+
+    @property
+    def param_dtype(self):
+        return canonical_dtype(self.param)
+
+    @property
+    def compute_dtype(self):
+        return canonical_dtype(self.compute)
+
+    @property
+    def accum_dtype(self):
+        return canonical_dtype(self.accum)
+
+
+FP32 = DTypePolicy(param="float32", compute="float32", accum="float32")
+MIXED = DTypePolicy(param="float32", compute="bfloat16", accum="float32")

@@ -1,0 +1,70 @@
+"""Small pytree utilities used across the framework (no flax dependency)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_map_with_path(fn: Callable[[Tuple[str, ...], Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives a tuple-of-strings path (dict keys only)."""
+
+    def _walk(path: Tuple[str, ...], node: Any) -> Any:
+        if isinstance(node, dict):
+            return {k: _walk(path + (str(k),), v) for k, v in node.items()}
+        return fn(path, node)
+
+    return _walk((), tree)
+
+
+# sentinel path suffix marking an EMPTY dict subtree (e.g. the param dict of
+# OLMo's non-parametric LayerNorm) so flatten/unflatten stays a bijection —
+# without it, restored pytrees would lose empty subtrees and break structure
+# checks against live models.
+EMPTY_SENTINEL = "__empty_dict__"
+
+
+def flatten_dict(tree: Dict[str, Any], sep: str = "/") -> Dict[str, Any]:
+    """Flatten a nested dict pytree into {path: leaf}."""
+    out: Dict[str, Any] = {}
+
+    def _walk(prefix: str, node: Any) -> None:
+        if isinstance(node, dict) and not node:
+            out[f"{prefix}{sep}{EMPTY_SENTINEL}" if prefix
+                else EMPTY_SENTINEL] = np.zeros((0,), dtype=np.float32)
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                _walk(f"{prefix}{sep}{k}" if prefix else str(k), v)
+        else:
+            out[prefix] = node
+
+    _walk("", tree)
+    return out
+
+
+def unflatten_dict(flat: Dict[str, Any], sep: str = "/") -> Dict[str, Any]:
+    """Inverse of flatten_dict."""
+    out: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        keys = path.split(sep)
+        node = out
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        if keys[-1] == EMPTY_SENTINEL:
+            continue  # presence of the key already created the empty dict
+        node[keys[-1]] = leaf
+    return out

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` lookup for all 10 assigned archs.
+
+Each ``<id>.py`` module defines ``FULL`` (the exact published config) and
+``SMOKE`` (a reduced same-family config for CPU tests). ``get_config``
+resolves ids; ``variants`` applies attention-mode overrides (the paper's RM
+linear attention) used by the dry-run and the long-context cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES: Dict[str, str] = {
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False,
+               attention_mode: str | None = None) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    cfg: ModelConfig = mod.SMOKE if smoke else mod.FULL
+    if attention_mode is not None and attention_mode != cfg.attention_mode:
+        if not _supports_rm(cfg) and attention_mode == "rm":
+            raise ValueError(
+                f"{arch} is attention-free; the paper's RM attention mode "
+                "does not apply (DESIGN.md §6)."
+            )
+        cfg = dataclasses.replace(cfg, attention_mode=attention_mode)
+    return cfg.validate()
+
+
+def _supports_rm(cfg: ModelConfig) -> bool:
+    return any(
+        b.split("_")[0] in ("attn", "mla") for b in cfg.block_pattern
+    ) or cfg.first_k_dense > 0

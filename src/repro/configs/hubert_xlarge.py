@@ -1,0 +1,47 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H (MHA) d_ff=5120 vocab=504 —
+encoder-only (same arch as wav2vec2); conv frontend is a STUB (input_specs
+supplies precomputed frame embeddings). [arXiv:2106.07447; unverified]
+
+Encoder-only: no decode step; decode-family shapes are skipped (DESIGN.md §6).
+"""
+from repro.models.config import ModelConfig, RMAttentionConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    max_seq_len=32768,
+    block_pattern=("attn_mlp",),
+    causal=False,                  # bidirectional encoder
+    pos_embedding="sinusoidal",
+    norm_kind="layernorm",
+    mlp_kind="gelu",
+    frontend="audio_stub",
+    rm=RMAttentionConfig(num_features=256),
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=64,
+    max_seq_len=256,
+    block_pattern=("attn_mlp",),
+    causal=False,
+    pos_embedding="sinusoidal",
+    norm_kind="layernorm",
+    mlp_kind="gelu",
+    frontend="audio_stub",
+    rm=RMAttentionConfig(num_features=64, n_max=6),
+)

@@ -1,0 +1,62 @@
+"""The paper's contribution: Random Maclaurin feature maps for dot product
+kernels (Kar & Karnick, AISTATS 2012), as composable JAX modules."""
+from repro.core.maclaurin import (
+    DotProductKernel,
+    ExponentialDotProductKernel,
+    HomogeneousPolynomialKernel,
+    MaclaurinKernel,
+    PolynomialKernel,
+    VovkInfiniteKernel,
+    VovkRealKernel,
+    kernel_from_name,
+)
+from repro.core.feature_map import RMFeatureMap, degree_measure, make_feature_map
+from repro.core.truncated import make_truncated_feature_map, truncation_degree
+from repro.core.compositional import (
+    CompositionalFeatureMap,
+    RademacherInnerMap,
+    RFFInnerMap,
+    make_compositional_feature_map,
+)
+from repro.core.bounds import (
+    HoeffdingConstants,
+    constants_for,
+    pointwise_failure_prob,
+    required_num_features,
+    uniform_failure_prob,
+)
+from repro.core.linear_models import (
+    Classifier,
+    train_kernel_ridge,
+    train_kernel_svm,
+    train_linear,
+)
+
+__all__ = [
+    "DotProductKernel",
+    "ExponentialDotProductKernel",
+    "HomogeneousPolynomialKernel",
+    "MaclaurinKernel",
+    "PolynomialKernel",
+    "VovkInfiniteKernel",
+    "VovkRealKernel",
+    "kernel_from_name",
+    "RMFeatureMap",
+    "degree_measure",
+    "make_feature_map",
+    "make_truncated_feature_map",
+    "truncation_degree",
+    "CompositionalFeatureMap",
+    "RademacherInnerMap",
+    "RFFInnerMap",
+    "make_compositional_feature_map",
+    "HoeffdingConstants",
+    "constants_for",
+    "pointwise_failure_prob",
+    "required_num_features",
+    "uniform_failure_prob",
+    "Classifier",
+    "train_kernel_ridge",
+    "train_kernel_svm",
+    "train_linear",
+]

@@ -1,0 +1,106 @@
+"""Theorem 12 / Theorem 16 constants and required-D calculators.
+
+All quantities follow the paper's notation:
+
+  * domain ``Omega ⊆ B_1(0, R)`` in R^d,
+  * estimator bound   ``C_Omega = p * f(p R^2)``                (Lemma 8)
+  * kernel Lipschitz  ``R f'(R^2)``                             (Lemma 10)
+  * estimator Lip.    ``p^2 R sqrt(d) f'(p R^2)``               (Lemma 11)
+  * L = sum of the two                                           (§4.1)
+  * failure prob     ``2 (32 R L / eps)^{2d} exp(-D eps^2 / (8 C^2))``
+
+plus the beyond-paper constant for the ``proportional`` degree measure
+(q_n ∝ a_n R^{2n}): there every feature satisfies
+``|Z(x)Z(y)| <= sum_n a_n R^{2n} = f(R^2)`` — strictly smaller than the
+paper's ``p f(p R^2)``, shrinking required D by the squared ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.maclaurin import DotProductKernel
+
+__all__ = ["HoeffdingConstants", "constants_for", "required_num_features",
+           "pointwise_failure_prob", "uniform_failure_prob"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HoeffdingConstants:
+    """All the constants entering Theorem 12 for one (kernel, domain) pair."""
+
+    radius: float
+    dim: int
+    p: float
+    c_omega: float          # paper estimator bound  p f(pR^2)
+    c_proportional: float   # beyond-paper bound     f(R^2)
+    lipschitz: float        # L of §4.1
+
+    def required_d(self, eps: float, delta: float, measure: str = "geometric") -> int:
+        c = self.c_omega if measure == "geometric" else self.c_proportional
+        log_cover = 2.0 * self.dim * math.log(max(32.0 * self.radius * self.lipschitz / eps, 2.0))
+        d_req = 8.0 * c**2 / eps**2 * (log_cover + math.log(2.0 / delta))
+        return int(math.ceil(d_req))
+
+
+def constants_for(
+    kernel: DotProductKernel, radius: float, dim: int, p: float = 2.0
+) -> HoeffdingConstants:
+    r2 = radius**2
+    if np.isfinite(kernel.radius) and p * r2 >= kernel.radius:
+        raise ValueError(
+            f"p*R^2 = {p * r2:g} exceeds the series radius {kernel.radius:g} "
+            f"of {kernel.name}; rescale the data (paper §3, choose c > I/gamma)."
+        )
+    f_pr2 = float(kernel.f(p * r2))
+    fp_r2 = float(kernel.fprime(r2))
+    fp_pr2 = float(kernel.fprime(p * r2))
+    c_omega = p * f_pr2
+    c_prop = float(kernel.f(r2))
+    lipschitz = radius * fp_r2 + p**2 * radius * math.sqrt(dim) * fp_pr2
+    return HoeffdingConstants(
+        radius=radius,
+        dim=dim,
+        p=p,
+        c_omega=c_omega,
+        c_proportional=c_prop,
+        lipschitz=lipschitz,
+    )
+
+
+def pointwise_failure_prob(
+    consts: HoeffdingConstants, num_features: int, eps: float,
+    measure: str = "geometric",
+) -> float:
+    """Hoeffding bound for a single pair (x, y)."""
+    c = consts.c_omega if measure == "geometric" else consts.c_proportional
+    return 2.0 * math.exp(-num_features * eps**2 / (8.0 * c**2))
+
+
+def uniform_failure_prob(
+    consts: HoeffdingConstants, num_features: int, eps: float,
+    measure: str = "geometric",
+) -> float:
+    """Theorem 12's uniform bound over the whole domain (can exceed 1)."""
+    c = consts.c_omega if measure == "geometric" else consts.c_proportional
+    log_p = (
+        math.log(2.0)
+        + 2.0 * consts.dim * math.log(max(32.0 * consts.radius * consts.lipschitz / eps, 1e-9))
+        - num_features * eps**2 / (8.0 * c**2)
+    )
+    return math.exp(min(log_p, 50.0))
+
+
+def required_num_features(
+    kernel: DotProductKernel,
+    radius: float,
+    dim: int,
+    eps: float,
+    delta: float,
+    p: float = 2.0,
+    measure: str = "geometric",
+) -> int:
+    """D such that Theorem 12 guarantees sup error <= eps w.p. >= 1 - delta."""
+    return constants_for(kernel, radius, dim, p).required_d(eps, delta, measure)

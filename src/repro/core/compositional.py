@@ -1,0 +1,226 @@
+"""Algorithm 2 — Random Maclaurin feature maps for compositional kernels.
+
+``K_co(x, y) = K_dp(K(x, y)) = f(K(x, y))`` for an arbitrary PD kernel K,
+given black-box access to a routine A that returns *one-dimensional* unbiased
+feature maps W for K: ``E[W(x) W(y)] = K(x, y)``, ``|W(x)| <= sqrt(C_W)``.
+
+Per output feature: draw ``N ~ q``, get N independent instantiations
+``W_1..W_N`` from A, and emit ``Z(x) = sqrt(a_N / q_N) * prod_j W_j(x)``.
+
+Inner maps provided:
+
+  * ``RademacherInnerMap`` — W(x) = w.x with Rademacher w. Recovers
+    Algorithm 1 exactly (the dot product composed into K_dp).
+  * ``RFFInnerMap`` — Rahimi-Recht random Fourier features for the Gaussian
+    kernel: W(x) = sqrt(2) cos(w.x + b), w ~ N(0, 1/sigma^2 I),
+    b ~ U[0, 2pi). Bounded by sqrt(2), unbiased for exp(-|x-y|^2/2sigma^2).
+    Composing: f(K_rbf) e.g. exp(K_rbf(x,y)) — kernels outside every prior
+    feature-map family (paper §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feature_map import degree_measure
+from repro.core.maclaurin import DotProductKernel
+
+__all__ = [
+    "RademacherInnerMap",
+    "RFFInnerMap",
+    "CompositionalFeatureMap",
+    "make_compositional_feature_map",
+]
+
+
+class InnerMap:
+    """A batch of M independent 1-d feature maps W for the inner kernel K.
+
+    ``apply(x)`` returns ``[..., M]``: column j is W_j evaluated at x.
+    """
+
+    bound: float  # sqrt(C_W)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def exact_kernel(self, X: jax.Array, Y: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class RademacherInnerMap(InnerMap):
+    """W_j(x) = <w_j, x>, w Rademacher — the dot product inner kernel."""
+
+    omega: jax.Array  # [M, d]
+    bound: float = np.inf  # bounded by R in B_1(0,R) only
+
+    @staticmethod
+    def create(key: jax.Array, num: int, dim: int) -> "RademacherInnerMap":
+        bern = jax.random.bernoulli(key, 0.5, (num, dim))
+        return RademacherInnerMap(omega=2.0 * bern.astype(jnp.float32) - 1.0)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return x @ self.omega.T
+
+    def exact_kernel(self, X, Y):
+        return X @ Y.T
+
+
+@dataclasses.dataclass
+class RFFInnerMap(InnerMap):
+    """Rahimi-Recht random Fourier features for the Gaussian RBF kernel."""
+
+    w: jax.Array  # [M, d]
+    b: jax.Array  # [M]
+    sigma: float = 1.0
+    bound: float = float(np.sqrt(2.0))
+
+    @staticmethod
+    def create(key: jax.Array, num: int, dim: int, sigma: float = 1.0) -> "RFFInnerMap":
+        kw, kb = jax.random.split(key)
+        w = jax.random.normal(kw, (num, dim)) / sigma
+        b = jax.random.uniform(kb, (num,), minval=0.0, maxval=2.0 * np.pi)
+        return RFFInnerMap(w=w, b=b, sigma=sigma)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return jnp.sqrt(2.0) * jnp.cos(x @ self.w.T + self.b)
+
+    def exact_kernel(self, X, Y):
+        sq = (
+            jnp.sum(X**2, -1)[:, None]
+            + jnp.sum(Y**2, -1)[None, :]
+            - 2.0 * X @ Y.T
+        )
+        return jnp.exp(-sq / (2.0 * self.sigma**2))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompositionalFeatureMap:
+    """Degree-bucketed Algorithm 2 map.
+
+    For each allocated degree n there is an inner map batch with ``c_n * n``
+    independent W's; feature i of the bucket is the product of its n columns.
+    """
+
+    degrees: Tuple[int, ...]
+    counts: Tuple[int, ...]
+    inner_maps: List[InnerMap]
+    scales: List[jax.Array]
+    const: Optional[jax.Array]
+    input_dim: int
+
+    def tree_flatten(self):
+        return (self.inner_maps, self.scales, self.const), (
+            self.degrees,
+            self.counts,
+            self.input_dim,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        inner_maps, scales, const = children
+        degrees, counts, input_dim = aux
+        return cls(degrees, counts, inner_maps, scales, const, input_dim)
+
+    @property
+    def output_dim(self) -> int:
+        return sum(self.counts) + (1 if self.const is not None else 0)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        batch_shape = x.shape[:-1]
+        xf = x.reshape(-1, self.input_dim)
+        feats = []
+        if self.const is not None:
+            feats.append(jnp.broadcast_to(self.const, (xf.shape[0], 1)))
+        for deg, cnt, inner, scale in zip(
+            self.degrees, self.counts, self.inner_maps, self.scales
+        ):
+            w = inner.apply(xf)  # [B, cnt*deg]
+            w = w.reshape(xf.shape[0], cnt, deg)
+            feats.append(jnp.prod(w, axis=-1) * scale)
+        z = jnp.concatenate(feats, axis=-1)
+        return z.reshape(*batch_shape, z.shape[-1])
+
+    def estimate_gram(self, X, Y=None):
+        zx = self(X)
+        zy = zx if Y is None else self(Y)
+        return zx @ zy.T
+
+
+def make_compositional_feature_map(
+    dp_kernel: DotProductKernel,
+    inner_factory,
+    input_dim: int,
+    num_features: int,
+    key: jax.Array,
+    *,
+    p: float = 2.0,
+    measure: str = "geometric",
+    n_max: int = 24,
+    inner_bound: float = 1.0,
+    stratified: bool = True,
+) -> CompositionalFeatureMap:
+    """Build Algorithm 2's map.
+
+    ``inner_factory(key, num) -> InnerMap`` returns a batch of ``num``
+    independent inner maps (black-box A of the paper). ``inner_bound`` is
+    ``C_W`` and feeds the proportional measure (q_n ∝ a_n C_W^n).
+    """
+    dp_kernel.validate_positive_definite(n_max)
+    q = degree_measure(dp_kernel, n_max, p=p, kind=measure, radius=np.sqrt(inner_bound))
+    coefs = dp_kernel.coefs(n_max)
+
+    key_deg, key_inner = jax.random.split(key)
+    if stratified:
+        raw = q * num_features
+        counts_all = np.floor(raw).astype(np.int64)
+        deficit = num_features - int(counts_all.sum())
+        if deficit > 0:
+            order = np.argsort(-(raw - counts_all))
+            counts_all[order[:deficit]] += 1
+    else:
+        seed = int(jax.random.randint(key_deg, (), 0, 2**31 - 1))
+        rng = np.random.Generator(np.random.Philox(seed))
+        draws = rng.choice(len(q), size=num_features, p=q)
+        counts_all = np.bincount(draws, minlength=len(q)).astype(np.int64)
+
+    def bucket_scale(n: int, cnt: int) -> float:
+        if stratified:
+            return float(np.sqrt(coefs[n] / cnt))
+        return float(np.sqrt(coefs[n] / q[n]) / np.sqrt(num_features))
+
+    degrees: List[int] = []
+    counts: List[int] = []
+    inner_maps: List[InnerMap] = []
+    scales: List[jax.Array] = []
+    const = None
+    if counts_all[0] > 0:
+        c0 = int(counts_all[0])
+        const = jnp.asarray(np.sqrt(c0) * bucket_scale(0, c0), dtype=jnp.float32)
+
+    subkeys = jax.random.split(key_inner, int((counts_all[1:] > 0).sum()) + 1)
+    ki = 0
+    for n in range(1, n_max + 1):
+        cnt = int(counts_all[n])
+        if cnt == 0:
+            continue
+        inner_maps.append(inner_factory(subkeys[ki], cnt * n))
+        ki += 1
+        degrees.append(n)
+        counts.append(cnt)
+        scales.append(jnp.asarray(bucket_scale(n, cnt), dtype=jnp.float32))
+
+    return CompositionalFeatureMap(
+        degrees=tuple(degrees),
+        counts=tuple(counts),
+        inner_maps=inner_maps,
+        scales=scales,
+        const=const,
+        input_dim=input_dim,
+    )

@@ -1,0 +1,282 @@
+"""Dot product kernel zoo with Maclaurin coefficient access.
+
+A dot product kernel is ``K(x, y) = f(<x, y>)``. By Schoenberg's theorem
+(paper Theorem 1), ``f`` yields a positive definite kernel on the unit ball of
+a Hilbert space iff its Maclaurin expansion ``f(x) = sum_n a_n x^n`` has
+``a_n >= 0`` for all n. Every kernel here exposes:
+
+  * ``coefs(n_max)`` — the coefficients ``a_0 .. a_{n_max}`` (float64, host),
+  * ``f(x)`` / ``fprime(x)`` — closed forms (work on numpy or jax arrays),
+  * ``gram(X, Y)`` — the exact kernel matrix,
+  * ``radius`` — radius of convergence of the series (np.inf if entire).
+
+Coefficients are computed in log-space where factorials/binomials are
+involved, so large degrees / small sigmas stay finite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DotProductKernel",
+    "HomogeneousPolynomialKernel",
+    "PolynomialKernel",
+    "ExponentialDotProductKernel",
+    "VovkRealKernel",
+    "VovkInfiniteKernel",
+    "MaclaurinKernel",
+    "kernel_from_name",
+]
+
+
+class DotProductKernel:
+    """Base class. Subclasses must set ``name`` and implement ``coef``/``f``."""
+
+    name: str = "abstract"
+    #: radius of convergence of the Maclaurin series (np.inf when entire)
+    radius: float = np.inf
+
+    # -- series ------------------------------------------------------------
+    def coef(self, n: int) -> float:
+        raise NotImplementedError
+
+    def coefs(self, n_max: int) -> np.ndarray:
+        return np.asarray([self.coef(n) for n in range(n_max + 1)], dtype=np.float64)
+
+    def validate_positive_definite(self, n_max: int = 64) -> None:
+        """Theorem 1: all Maclaurin coefficients must be non-negative."""
+        cs = self.coefs(n_max)
+        if np.any(cs < -1e-300):
+            bad = int(np.argmax(cs < 0))
+            raise ValueError(
+                f"kernel {self.name!r} has negative Maclaurin coefficient "
+                f"a_{bad}={cs[bad]:.3e}; not positive definite (Schoenberg)."
+            )
+
+    # -- closed forms --------------------------------------------------------
+    def f(self, x):
+        raise NotImplementedError
+
+    def fprime(self, x):
+        raise NotImplementedError
+
+    def series_eval(self, x, n_max: int = 64) -> np.ndarray:
+        """Evaluate via the truncated series (float64). For tests/oracles."""
+        x = np.asarray(x, dtype=np.float64)
+        cs = self.coefs(n_max)
+        out = np.zeros_like(x)
+        for n in range(n_max, -1, -1):  # Horner
+            out = out * x + cs[n]
+        return out
+
+    # -- batched kernels -----------------------------------------------------
+    def gram(self, X, Y=None):
+        """Exact kernel matrix ``K[i, j] = f(<X_i, Y_j>)`` (jax arrays ok)."""
+        Y = X if Y is None else Y
+        return self.f(X @ Y.T)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging sugar
+        return f"{type(self).__name__}({self.name})"
+
+
+@dataclasses.dataclass(frozen=True)
+class HomogeneousPolynomialKernel(DotProductKernel):
+    """``K(x, y) = <x, y>^p`` — a_p = 1, all other coefficients zero."""
+
+    degree: int = 10
+
+    def __post_init__(self):
+        if self.degree < 1:
+            raise ValueError("degree must be >= 1")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"homogeneous_poly{self.degree}"
+
+    def coef(self, n: int) -> float:
+        return 1.0 if n == self.degree else 0.0
+
+    def f(self, x):
+        return x**self.degree
+
+    def fprime(self, x):
+        return self.degree * x ** (self.degree - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolynomialKernel(DotProductKernel):
+    """``K(x, y) = (<x, y> + r)^p`` — a_n = C(p, n) r^(p-n) for n <= p."""
+
+    degree: int = 10
+    r: float = 1.0
+
+    def __post_init__(self):
+        if self.degree < 1:
+            raise ValueError("degree must be >= 1")
+        if self.r < 0:
+            raise ValueError("offset r must be >= 0 for positive definiteness")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"poly{self.degree}_r{self.r:g}"
+
+    def coef(self, n: int) -> float:
+        if n > self.degree:
+            return 0.0
+        return float(math.comb(self.degree, n)) * self.r ** (self.degree - n)
+
+    def f(self, x):
+        return (x + self.r) ** self.degree
+
+    def fprime(self, x):
+        return self.degree * (x + self.r) ** (self.degree - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExponentialDotProductKernel(DotProductKernel):
+    """``K(x, y) = exp(<x, y> / sigma^2)`` — a_n = sigma^{-2n} / n!.
+
+    The softmax-attention kernel: with ``sigma^2 = sqrt(d_head)`` this is the
+    unnormalized attention weight ``exp(q.k / sqrt(d_head))``.
+    """
+
+    sigma2: float = 1.0
+
+    def __post_init__(self):
+        if self.sigma2 <= 0:
+            raise ValueError("sigma2 must be > 0")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"exp_dot_s{self.sigma2:g}"
+
+    def coef(self, n: int) -> float:
+        # exp(log) for stability at large n / small sigma2.
+        return math.exp(-n * math.log(self.sigma2) - math.lgamma(n + 1))
+
+    def f(self, x):
+        if isinstance(x, (np.ndarray, float, int)):
+            return np.exp(np.asarray(x, dtype=np.float64) / self.sigma2)
+        return jnp.exp(x / self.sigma2)
+
+    def fprime(self, x):
+        return self.f(x) / self.sigma2
+
+
+@dataclasses.dataclass(frozen=True)
+class VovkRealKernel(DotProductKernel):
+    """Vovk's real polynomial kernel ``(1 - x^p) / (1 - x) = sum_{n<p} x^n``."""
+
+    degree: int = 10
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"vovk_real{self.degree}"
+
+    def coef(self, n: int) -> float:
+        return 1.0 if n < self.degree else 0.0
+
+    def f(self, x):
+        # Stable at x == 1 via the series form.
+        if isinstance(x, (np.ndarray, float, int)):
+            x = np.asarray(x, dtype=np.float64)
+            out = np.zeros_like(x)
+            for _ in range(self.degree):
+                out = out * x + 1.0
+            return out
+        out = jnp.zeros_like(x)
+        for _ in range(self.degree):
+            out = out * x + 1.0
+        return out
+
+    def fprime(self, x):
+        if isinstance(x, (np.ndarray, float, int)):
+            x = np.asarray(x, dtype=np.float64)
+            out = np.zeros_like(x)
+            for n in range(self.degree - 1, 0, -1):
+                out = out * x + float(n)
+            return out
+        out = jnp.zeros_like(x)
+        for n in range(self.degree - 1, 0, -1):
+            out = out * x + float(n)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class VovkInfiniteKernel(DotProductKernel):
+    """Vovk's infinite polynomial kernel ``1 / (1 - x)`` (radius 1)."""
+
+    radius: float = 1.0
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return "vovk_infinite"
+
+    def coef(self, n: int) -> float:
+        return 1.0
+
+    def f(self, x):
+        return 1.0 / (1.0 - x)
+
+    def fprime(self, x):
+        return 1.0 / (1.0 - x) ** 2
+
+
+@dataclasses.dataclass(frozen=True)
+class MaclaurinKernel(DotProductKernel):
+    """Generic kernel from a user-supplied coefficient function.
+
+    ``f``/``fprime`` fall back to (slow, float64) series evaluation when no
+    closed form is given.
+    """
+
+    coef_fn: Callable[[int], float] = lambda n: 0.0
+    f_fn: Optional[Callable] = None
+    fprime_fn: Optional[Callable] = None
+    label: str = "custom"
+    radius: float = np.inf
+    series_terms: int = 64
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"maclaurin_{self.label}"
+
+    def coef(self, n: int) -> float:
+        return float(self.coef_fn(n))
+
+    def f(self, x):
+        if self.f_fn is not None:
+            return self.f_fn(x)
+        return self.series_eval(x, self.series_terms)
+
+    def fprime(self, x):
+        if self.fprime_fn is not None:
+            return self.fprime_fn(x)
+        x = np.asarray(x, dtype=np.float64)
+        cs = self.coefs(self.series_terms)
+        out = np.zeros_like(x)
+        for n in range(self.series_terms, 0, -1):
+            out = out * x + n * cs[n]
+        return out
+
+
+def kernel_from_name(name: str, **kwargs) -> DotProductKernel:
+    """Config-friendly constructor: 'exp', 'poly', 'homogeneous', 'vovk_real',
+    'vovk_infinite'."""
+    name = name.lower()
+    if name in ("exp", "exponential", "exp_dot"):
+        return ExponentialDotProductKernel(**kwargs)
+    if name in ("poly", "polynomial"):
+        return PolynomialKernel(**kwargs)
+    if name in ("homogeneous", "homogeneous_poly", "hpoly"):
+        return HomogeneousPolynomialKernel(**kwargs)
+    if name == "vovk_real":
+        return VovkRealKernel(**kwargs)
+    if name == "vovk_infinite":
+        return VovkInfiniteKernel(**kwargs)
+    raise ValueError(f"unknown dot product kernel {name!r}")

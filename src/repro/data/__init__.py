@@ -1,0 +1,14 @@
+from repro.data.synthetic import SyntheticLMDataset, byte_tokenize
+from repro.data.toy import (
+    unit_ball_points,
+    make_classification_dataset,
+    UCI_LIKE_SPECS,
+)
+
+__all__ = [
+    "SyntheticLMDataset",
+    "byte_tokenize",
+    "unit_ball_points",
+    "make_classification_dataset",
+    "UCI_LIKE_SPECS",
+]

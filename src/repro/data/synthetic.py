@@ -1,0 +1,85 @@
+"""Deterministic synthetic data pipeline.
+
+Requirements at scale: (1) per-host sharding without coordination — every
+host computes its own shard from (step, host_index) alone; (2) exactly
+resumable — the stream is a pure function of the step, so restoring a
+checkpoint at step k replays from k with zero state; (3) deterministic
+across restarts and topologies.
+
+``SyntheticLMDataset`` generates a second-order Markov "language" from a
+hashed transition table — enough structure that a ~10-100M model's loss
+drops well below the uniform baseline within a few hundred steps (used by
+examples/train_lm.py), while remaining fully offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def byte_tokenize(text: str, vocab_size: int = 256) -> np.ndarray:
+    data = np.frombuffer(text.encode("utf-8"), dtype=np.uint8)
+    return (data % vocab_size).astype(np.int32)
+
+
+@dataclasses.dataclass
+class SyntheticLMDataset:
+    vocab_size: int = 512
+    seq_len: int = 256
+    global_batch: int = 8
+    seed: int = 0
+    branching: int = 8          # markov fan-out per context
+    num_contexts: int = 512     # transition-table rows (task difficulty)
+    order: int = 1              # markov order: 1 = learnable without
+    #                             attention (fast CI), 2 = needs a
+    #                             previous-token attention circuit
+    num_hosts: int = 1
+    host_index: int = 0
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_hosts == 0
+        self.local_batch = self.global_batch // self.num_hosts
+        rng = np.random.Generator(np.random.Philox(self.seed))
+        # second-order transition table: context hash -> branching successors
+        self._succ = rng.integers(
+            0, self.vocab_size, size=(self.num_contexts, self.branching),
+            dtype=np.int64,
+        )
+
+    def _gen_sequences(self, step: int) -> np.ndarray:
+        """[local_batch, seq_len + 1] tokens, pure function of (step, host)."""
+        n = self.local_batch
+        rng = np.random.Generator(
+            np.random.Philox(key=self.seed,
+                             counter=step * self.num_hosts + self.host_index)
+        )
+        out = np.empty((n, self.seq_len + 1), dtype=np.int64)
+        out[:, 0] = rng.integers(0, self.vocab_size, n)
+        out[:, 1] = rng.integers(0, self.vocab_size, n)
+        choices = rng.integers(0, self.branching, size=(n, self.seq_len + 1))
+        tbl = self._succ
+        h = len(tbl)
+        for t in range(2, self.seq_len + 1):
+            if self.order == 1:
+                ctx = (out[:, t - 1] * 31) % h
+            else:
+                ctx = (out[:, t - 1] * 31 + out[:, t - 2] * 7) % h
+            out[:, t] = tbl[ctx, choices[:, t]]
+        return out.astype(np.int32)
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        seq = self._gen_sequences(step)
+        return {
+            "tokens": jnp.asarray(seq[:, :-1]),
+            "targets": jnp.asarray(seq[:, 1:]),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

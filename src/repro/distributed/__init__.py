@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    constrain,
+    logical_rules_context,
+    set_default_rules,
+    params_partition_specs,
+    batch_partition_specs,
+    DEFAULT_RULES,
+)
+
+__all__ = [
+    "constrain",
+    "logical_rules_context",
+    "set_default_rules",
+    "params_partition_specs",
+    "batch_partition_specs",
+    "DEFAULT_RULES",
+]

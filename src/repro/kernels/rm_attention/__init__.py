@@ -1,0 +1,11 @@
+from repro.kernels.rm_attention.ops import (
+    rm_attention_causal,
+    rm_attention_noncausal,
+    rm_attention_decode_step,
+)
+
+__all__ = [
+    "rm_attention_causal",
+    "rm_attention_noncausal",
+    "rm_attention_decode_step",
+]

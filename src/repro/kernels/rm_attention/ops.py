@@ -1,0 +1,176 @@
+"""Public jit'd RM-attention ops: causal (chunked Pallas forward + custom
+VJP), non-causal (pure matmul), and the O(1)-state decode step.
+
+The Pallas kernel has no automatic VJP, so ``rm_attention_causal`` is a
+``jax.custom_vjp``: the forward runs the Pallas kernel, the backward
+differentiates ``_causal_chunked_jnp`` — an algebraically identical chunked
+formulation whose peak memory is O(T * chunk) instead of O(T^2).
+
+Shapes use [B, H, T, F] features and [B, H, T, dv] values throughout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rm_attention.ref import (
+    _clamp_den,
+    rm_attention_decode_ref,
+    rm_attention_ref,
+)
+from repro.kernels.rm_attention.rm_attention import rm_attention_chunked_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _chunk_states(zk_p, v_p, chunk):
+    """Per-chunk key states + exclusive prefixes. zk_p: [B,H,T,F] padded."""
+    b, h, t, f = zk_p.shape
+    dv = v_p.shape[-1]
+    n = t // chunk
+    zk_c = zk_p.reshape(b, h, n, chunk, f).astype(jnp.float32)
+    v_c = v_p.reshape(b, h, n, chunk, dv).astype(jnp.float32)
+    s_chunk = jnp.einsum("bhncf,bhncd->bhnfd", zk_c, v_c)
+    n_chunk = jnp.sum(zk_c, axis=3)
+    s_prev = jnp.cumsum(s_chunk, axis=2) - s_chunk
+    n_prev = jnp.cumsum(n_chunk, axis=2) - n_chunk
+    return zk_c, v_c, s_prev, n_prev
+
+
+def _pad_t(x, pad):
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+def _causal_chunked_jnp(zq, zk, v, chunk: int, eps: float):
+    """Differentiable chunk-parallel causal linear attention (XLA path)."""
+    b, h, t, f = zq.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    pad = _round_up(t, chunk) - t
+    zq_p, zk_p, v_p = _pad_t(zq, pad), _pad_t(zk, pad), _pad_t(v, pad)
+    n = (t + pad) // chunk
+    zq_c = zq_p.reshape(b, h, n, chunk, f).astype(jnp.float32)
+    zk_c, v_c, s_prev, n_prev = _chunk_states(zk_p, v_p, chunk)
+
+    scores = jnp.einsum("bhnqf,bhnkf->bhnqk", zq_c, zk_c)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    scores = jnp.where(mask, scores, 0.0)
+    num = jnp.einsum("bhnqk,bhnkd->bhnqd", scores, v_c)
+    num += jnp.einsum("bhnqf,bhnfd->bhnqd", zq_c, s_prev)
+    den = jnp.sum(scores, axis=-1)
+    den += jnp.einsum("bhnqf,bhnf->bhnq", zq_c, n_prev)
+    den = _clamp_den(den, eps)
+    out = num / den[..., None]
+    return out.reshape(b, h, t + pad, dv)[:, :, :t]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _causal_pallas(zq, zk, v, chunk: int, eps: float, interpret: bool):
+    b, h, t, f = zq.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    pad = _round_up(t, chunk) - t
+    zq_p, zk_p, v_p = _pad_t(zq, pad), _pad_t(zk, pad), _pad_t(v, pad)
+    n = (t + pad) // chunk
+    _, _, s_prev, n_prev = _chunk_states(zk_p, v_p, chunk)
+    out = rm_attention_chunked_pallas(
+        zq_p.reshape(b * h, t + pad, f),
+        zk_p.reshape(b * h, t + pad, f),
+        v_p.reshape(b * h, t + pad, dv),
+        s_prev.reshape(b * h, n, f, dv),
+        n_prev.reshape(b * h, n, f, 1),
+        chunk=chunk,
+        eps=eps,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, t + pad, dv)[:, :, :t]
+
+
+def _causal_pallas_fwd(zq, zk, v, chunk, eps, interpret):
+    return _causal_pallas(zq, zk, v, chunk, eps, interpret), (zq, zk, v)
+
+
+def _causal_pallas_bwd(chunk, eps, interpret, res, g):
+    zq, zk, v = res
+    _, vjp = jax.vjp(
+        lambda a, b_, c: _causal_chunked_jnp(a, b_, c, chunk, eps), zq, zk, v
+    )
+    return vjp(g.astype(jnp.float32))
+
+
+_causal_pallas.defvjp(_causal_pallas_fwd, _causal_pallas_bwd)
+
+
+def rm_attention_causal(
+    zq: jax.Array,
+    zk: jax.Array,
+    v: jax.Array,
+    *,
+    chunk: int = 128,
+    eps: float = 1e-4,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Causal linear attention, O(T * F * (C + dv)) work vs exact O(T^2 * dv).
+
+    Pallas forward with a chunked-XLA custom VJP. ``use_pallas`` defaults to
+    True on TPU and False elsewhere: interpret-mode Pallas unrolls the grid
+    into the HLO, which is fine for kernel tests but would bloat dry-run
+    compiles (tests opt in explicitly with use_pallas=True, interpret=True).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_pallas:
+        return _causal_chunked_jnp(zq, zk, v, chunk, eps)
+    return _causal_pallas(zq, zk, v, chunk, eps, interpret)
+
+
+def rm_attention_noncausal(
+    zq: jax.Array,
+    zk: jax.Array,
+    v: jax.Array,
+    *,
+    eps: float = 1e-4,
+) -> jax.Array:
+    """Bidirectional linear attention: two GEMMs, no kernel needed."""
+    zq = zq.astype(jnp.float32)
+    zk = zk.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    s = jnp.einsum("bhsf,bhsd->bhfd", zk, v)           # [B,H,F,dv]
+    n = jnp.sum(zk, axis=2)                            # [B,H,F]
+    num = jnp.einsum("bhtf,bhfd->bhtd", zq, s)
+    den = _clamp_den(jnp.einsum("bhtf,bhf->bht", zq, n), eps)
+    return num / den[..., None]
+
+
+def rm_attention_decode_step(
+    zq: jax.Array,       # [B, H, F]
+    zk: jax.Array,       # [B, H, F]
+    v: jax.Array,        # [B, H, dv]
+    state_s: jax.Array,  # [B, H, F, dv]
+    state_n: jax.Array,  # [B, H, F]
+    *,
+    eps: float = 1e-4,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1)-memory decode: rank-1 state update + two GEMVs.
+
+    This is what replaces the growing KV cache for `long_500k` decoding.
+    """
+    return rm_attention_decode_ref(zq, zk, v, state_s, state_n, eps=eps)
+
+
+def rm_attention_prefill_final_state(
+    zk: jax.Array, v: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """States after consuming a whole prefix (to switch prefill->decode)."""
+    s = jnp.einsum("bhsf,bhsd->bhfd", zk.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.sum(zk.astype(jnp.float32), axis=2)
+    return s, n

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for RM linear attention.
+
+Given feature-mapped queries/keys ``zq, zk`` ([B, H, T, F]) and values ``v``
+([B, H, T, dv]), linear attention is
+
+    out_t = ( sum_{s in S(t)} (zq_t . zk_s) v_s ) / ( sum_{s in S(t)} zq_t . zk_s )
+
+with S(t) = {s <= t} (causal) or all of [T] (non-causal). Because RM features
+are *signed*, the denominator can pass through zero; both oracle and kernel
+clamp it to ``sign(den) * max(|den|, eps)`` (DESIGN.md §7).
+
+The oracle is the O(T^2) direct evaluation — it is also, exactly, what
+softmax attention converges to as the RM feature count grows (the kernel
+estimate of exp(q.k) in numerator and normalizer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _clamp_den(den: jax.Array, eps: float) -> jax.Array:
+    return jnp.where(jnp.abs(den) < eps, jnp.where(den >= 0, eps, -eps), den)
+
+
+def rm_attention_ref(
+    zq: jax.Array,   # [B, H, T, F]
+    zk: jax.Array,   # [B, H, T, F]
+    v: jax.Array,    # [B, H, T, dv]
+    causal: bool = True,
+    eps: float = 1e-4,
+) -> jax.Array:      # [B, H, T, dv]
+    zq = zq.astype(jnp.float32)
+    zk = zk.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = jnp.einsum("bhtf,bhsf->bhts", zq, zk)
+    if causal:
+        t = zq.shape[2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        w = jnp.where(mask, w, 0.0)
+    num = jnp.einsum("bhts,bhsd->bhtd", w, v)
+    den = _clamp_den(jnp.sum(w, axis=-1), eps)
+    return num / den[..., None]
+
+
+def rm_attention_scan_ref(
+    zq: jax.Array, zk: jax.Array, v: jax.Array, eps: float = 1e-4
+) -> jax.Array:
+    """Sequential-state reference (the decode recurrence, scanned over T).
+
+    Mathematically identical to ``rm_attention_ref(causal=True)``; used to
+    check the chunked kernel's state bookkeeping and the decode step.
+    """
+    zq = zq.astype(jnp.float32)
+    zk = zk.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    b, h, t, f = zq.shape
+    dv = v.shape[-1]
+
+    def step(carry, xs):
+        s, n = carry                      # [B,H,F,dv], [B,H,F]
+        zq_t, zk_t, v_t = xs              # [B,H,F], [B,H,F], [B,H,dv]
+        s = s + zk_t[..., None] * v_t[..., None, :]
+        n = n + zk_t
+        num = jnp.einsum("bhf,bhfd->bhd", zq_t, s)
+        den = _clamp_den(jnp.einsum("bhf,bhf->bh", zq_t, n), eps)
+        return (s, n), num / den[..., None]
+
+    s0 = jnp.zeros((b, h, f, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, f), jnp.float32)
+    xs = (
+        jnp.moveaxis(zq, 2, 0),
+        jnp.moveaxis(zk, 2, 0),
+        jnp.moveaxis(v, 2, 0),
+    )
+    _, out = jax.lax.scan(step, (s0, n0), xs)
+    return jnp.moveaxis(out, 0, 2)
+
+
+def rm_attention_decode_ref(
+    zq: jax.Array,    # [B, H, F]
+    zk: jax.Array,    # [B, H, F]
+    v: jax.Array,     # [B, H, dv]
+    state_s: jax.Array,  # [B, H, F, dv]
+    state_n: jax.Array,  # [B, H, F]
+    eps: float = 1e-4,
+):
+    """One decode step; returns (out [B,H,dv], new_s, new_n)."""
+    s = state_s + zk[..., None] * v[..., None, :]
+    n = state_n + zk
+    num = jnp.einsum("bhf,bhfd->bhd", zq.astype(jnp.float32), s)
+    den = _clamp_den(jnp.einsum("bhf,bhf->bh", zq.astype(jnp.float32), n), eps)
+    return num / den[..., None], s, n

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: chunked causal linear attention over RM features.
+
+Two-pass chunk-parallel formulation (no sequential dependency inside the
+kernel — TPU-friendly; the tiny inter-chunk prefix sum happens outside):
+
+  pass A (plain einsum, XLA):   S_i = Zk_i^T V_i   [F, dv],  n_i = Zk_i^T 1 [F]
+  prefix (lax.cumsum, outside): S_prev_i = sum_{j<i} S_j,  n_prev_i likewise
+  pass B (THIS kernel):         out_i = (tril(Zq_i Zk_i^T) V_i + Zq_i S_prev_i)
+                                        / clamp(rowsum + Zq_i n_prev_i)
+
+Pass B is the hot loop: per (batch*head, chunk) grid cell it runs a
+[C,F]x[F,C] masked score matmul, a [C,C]x[C,dv] value matmul and a
+[C,F]x[F,dv] state matmul entirely in VMEM. C and dv are 128-aligned;
+F (feature dim) is padded to 128 by ops.py.
+
+VMEM working set (fp32): C*F (zq) + C*F (zk) + C*dv (v) + F*dv (S_prev)
++ C*C (scores) + C*dv (acc) — e.g. C=256, F=256, dv=128: ~0.9 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rm_attn_kernel(zq_ref, zk_ref, v_ref, sprev_ref, nprev_ref, o_ref, *,
+                    eps: float):
+    zq = zq_ref[0].astype(jnp.float32)        # [C, F]
+    zk = zk_ref[0].astype(jnp.float32)        # [C, F]
+    v = v_ref[0].astype(jnp.float32)          # [C, dv]
+    s_prev = sprev_ref[0, 0].astype(jnp.float32)  # [F, dv]
+    n_prev = nprev_ref[0, 0].astype(jnp.float32)  # [F, 1]
+
+    c = zq.shape[0]
+    scores = jax.lax.dot_general(
+        zq, zk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # [C, C]
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    scores = jnp.where(row >= col, scores, 0.0)
+
+    num = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    num += jax.lax.dot_general(
+        zq, s_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # [C, dv]
+
+    den = jnp.sum(scores, axis=-1, keepdims=True)          # [C, 1]
+    den += jax.lax.dot_general(
+        zq, n_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # [C, 1]
+    den = jnp.where(jnp.abs(den) < eps, jnp.where(den >= 0, eps, -eps), den)
+    o_ref[0] = (num / den).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "eps", "interpret")
+)
+def rm_attention_chunked_pallas(
+    zq: jax.Array,      # [BH, T, F]  (T % chunk == 0, F 128-aligned)
+    zk: jax.Array,      # [BH, T, F]
+    v: jax.Array,       # [BH, T, dv]
+    s_prev: jax.Array,  # [BH, T//chunk, F, dv]  exclusive chunk prefix of Zk^T V
+    n_prev: jax.Array,  # [BH, T//chunk, F, 1]   exclusive chunk prefix of Zk^T 1
+    *,
+    chunk: int,
+    eps: float = 1e-4,
+    interpret: bool = False,
+) -> jax.Array:         # [BH, T, dv] float32
+    bh, t, f = zq.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nchunks = t // chunk
+    grid = (bh, nchunks)
+    return pl.pallas_call(
+        functools.partial(_rm_attn_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, f), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, f), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, f, dv), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, f, 1), lambda b, i: (b, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dv), jnp.float32),
+        interpret=interpret,
+    )(zq, zk, v, s_prev, n_prev)

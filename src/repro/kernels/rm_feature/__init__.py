@@ -1,0 +1,3 @@
+from repro.kernels.rm_feature.ops import apply_feature_map, rm_feature_bucket
+
+__all__ = ["apply_feature_map", "rm_feature_bucket"]

@@ -1,0 +1,104 @@
+"""jit'd public wrapper around the rm_feature Pallas kernel.
+
+Handles padding to MXU-aligned tiles, VMEM-budgeted block-size selection, and
+the multi-bucket (whole feature map) application. Falls back to the pure-jnp
+oracle automatically when Pallas is unavailable or shapes are degenerate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.rm_feature.ref import rm_feature_bucket_ref
+from repro.kernels.rm_feature.rm_feature import rm_feature_bucket_pallas
+
+# Conservative per-core VMEM working-set budget (bytes). v5e has ~128MiB of
+# VMEM per core; we budget well under it to leave room for double buffering.
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_blocks(d: int, degree: int, b: int, f: int) -> tuple[int, int]:
+    """Largest 128-multiple (block_b, block_f) whose working set fits VMEM."""
+    for bm, bf in ((512, 256), (256, 256), (256, 128), (128, 128), (128, 64), (64, 64), (32, 32), (16, 16), (8, 8)):
+        if bm > max(b, 8) * 2 or bf > max(f, 8) * 2:
+            continue
+        working = 4 * (bm * d + degree * bf * d + 2 * bm * bf)
+        if working <= _VMEM_BUDGET:
+            return bm, bf
+    return 8, 8
+
+
+def rm_feature_bucket(
+    x: jax.Array,
+    omega: jax.Array,
+    degree: int,
+    scale: float,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Apply one degree bucket: x [.., d], omega [count*degree, d] -> [.., count]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch_shape = x.shape[:-1]
+    d = x.shape[-1]
+    count = omega.shape[0] // degree
+    if not use_pallas or degree < 1:
+        out = rm_feature_bucket_ref(x.reshape(-1, d), omega, degree, scale)
+        return out.reshape(*batch_shape, count)
+
+    xf = x.reshape(-1, d)
+    b = xf.shape[0]
+    bm, bf = _pick_blocks(d, degree, b, count)
+    b_pad = _round_up(max(b, bm), bm)
+    f_pad = _round_up(max(count, bf), bf)
+    xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
+    # omega rows are feature-major: [count, degree, d] -> pad count -> [degree, F, d]
+    w = omega.reshape(count, degree, d)
+    w = jnp.pad(w, ((0, f_pad - count), (0, 0), (0, 0)))
+    w = jnp.transpose(w, (1, 0, 2))  # [degree, F, d]
+    out = rm_feature_bucket_pallas(
+        xp, w, degree=degree, scale=float(scale), block_b=bm, block_f=bf,
+        interpret=interpret,
+    )
+    return out[:b, :count].reshape(*batch_shape, count)
+
+
+def apply_feature_map(
+    fmap,
+    x: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Pallas-accelerated equivalent of ``RMFeatureMap.__call__``.
+
+    Produces the identical feature layout (h01 block, const column, degree
+    buckets in ascending order) so downstream code can swap paths freely.
+    """
+    batch_shape = x.shape[:-1]
+    xf = x.reshape(-1, fmap.input_dim)
+    feats = []
+    if fmap.h01:
+        a0, a1 = fmap.h01_coefs[0], fmap.h01_coefs[1]
+        feats.append(jnp.full((xf.shape[0], 1), jnp.sqrt(a0), dtype=jnp.float32))
+        feats.append(jnp.sqrt(a1) * xf.astype(jnp.float32))
+    if fmap.const is not None:
+        feats.append(jnp.broadcast_to(fmap.const, (xf.shape[0], 1)).astype(jnp.float32))
+    for deg, cnt, omega, scale in zip(fmap.degrees, fmap.counts, fmap.omegas,
+                                      fmap.scales):
+        feats.append(
+            rm_feature_bucket(
+                xf, omega, deg, float(scale), use_pallas=use_pallas,
+                interpret=interpret,
+            )
+        )
+    z = jnp.concatenate(feats, axis=-1)
+    return z.reshape(*batch_shape, z.shape[-1])

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the Random Maclaurin feature bucket.
+
+A "bucket" is the set of all features sharing one degree n (DESIGN.md §3):
+``omega`` holds ``count * degree`` Rademacher rows; feature i is
+``scale * prod_{j<degree} <omega[i*degree+j], x>``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rm_feature_bucket_ref(
+    x: jax.Array,          # [B, d]
+    omega: jax.Array,      # [count * degree, d]
+    degree: int,
+    scale: float,
+    accum_dtype=jnp.float32,
+) -> jax.Array:            # [B, count]
+    if degree < 1:
+        raise ValueError("bucket oracle handles degree >= 1")
+    count = omega.shape[0] // degree
+    proj = x.astype(accum_dtype) @ omega.astype(accum_dtype).T  # [B, count*degree]
+    proj = proj.reshape(x.shape[0], count, degree)
+    return jnp.prod(proj, axis=-1) * jnp.asarray(scale, accum_dtype)

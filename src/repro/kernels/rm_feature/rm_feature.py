@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused Random-Maclaurin feature bucket.
+
+Computes, for a degree-n bucket of ``F`` features,
+
+    out[b, f] = scale * prod_{j < n} <omega[f, j, :], x[b, :]>
+
+as n back-to-back MXU matmuls with the running product held in VMEM —
+one HBM read of x / omega, one HBM write of the output tile. This is the
+TPU-native replacement for the paper's per-feature loop (DESIGN.md §3).
+
+Tiling: grid (B/bm, F/bf); x tile [bm, d] and omega tile [n, bf, d] live in
+VMEM; the MXU sees [bm, d] x [d, bf] per product step. d is kept whole inside
+the block (RM attention uses d = d_head <= 256; the SVM path pads d to a
+multiple of 128). ``ops.py`` chooses bm/bf so the VMEM working set
+(bm*d + n*bf*d + 2*bm*bf floats) stays under the budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rm_feature_kernel(x_ref, w_ref, o_ref, *, degree: int, scale: float):
+    x = x_ref[...].astype(jnp.float32)            # [bm, d]
+    acc = None
+    for j in range(degree):
+        w = w_ref[j].astype(jnp.float32)          # [bf, d]
+        pj = jax.lax.dot_general(
+            x, w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                         # [bm, bf]
+        acc = pj if acc is None else acc * pj
+    o_ref[...] = (acc * scale).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("degree", "scale", "block_b", "block_f", "interpret"),
+)
+def rm_feature_bucket_pallas(
+    x: jax.Array,        # [B, d]   (B, d already padded by ops.py)
+    omega: jax.Array,    # [degree, F, d]
+    *,
+    degree: int,
+    scale: float,
+    block_b: int = 256,
+    block_f: int = 128,
+    interpret: bool = False,
+) -> jax.Array:          # [B, F] float32
+    b, d = x.shape
+    f = omega.shape[1]
+    assert b % block_b == 0 and f % block_f == 0, (b, f, block_b, block_f)
+    grid = (b // block_b, f // block_f)
+    return pl.pallas_call(
+        functools.partial(_rm_feature_kernel, degree=degree, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((degree, block_f, d), lambda i, j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.float32),
+        interpret=interpret,
+    )(x, omega)

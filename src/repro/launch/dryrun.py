@@ -1,0 +1,392 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached as JSON under results/dryrun/<mesh>/<arch>__<shape>.json
+(one file per cell; re-runs skip existing files unless --force). A compile
+SUCCESS for a cell proves the sharding config is coherent: no sharding
+mismatches, no unsupported collectives, memory analysis available for
+§Dry-run / §Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import (
+    HW_V5E,
+    analytic_inner_loop_flops,
+    collective_bytes_from_hlo,
+    count_params,
+    model_flops,
+    roofline_from_compiled,
+)
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import (
+    batch_partition_specs,
+    cache_partition_specs,
+    logical_rules_context,
+    params_partition_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, enumerate_cells, input_specs
+from repro.train.steps import (
+    TrainHyper,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _tree_sds(tree):
+    """Concrete-free ShapeDtypeStruct mirror of an abstract init."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _sharding_tree(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               attention_mode: str, rules_override=None,
+               hyper: TrainHyper | None = None, unroll: bool = True,
+               cfg_override=None):
+    """Lower + compile one cell; returns the record dict.
+
+    ``unroll=True`` (single-pod/roofline runs) fully unrolls the layer scan
+    so cost_analysis sees every layer; multi-pod sharding-proof runs use the
+    scanned form (fast compiles — the collective schedule per layer is
+    identical across layers).
+    """
+    cfg = get_config(arch, attention_mode=attention_mode)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if cfg_override is not None:
+        cfg = cfg_override(cfg)
+    spec = SHAPES[shape_name]
+    hyper = hyper or TrainHyper()
+    t0 = time.time()
+
+    with logical_rules_context(mesh, rules_override) as rules:
+        specs = input_specs(cfg, shape_name)
+        batch_sds = specs["batch"]
+        batch_spec = batch_partition_specs(batch_sds, mesh, rules)
+        batch_shard = _sharding_tree(batch_spec, mesh)
+
+        if spec.kind == "train":
+            state_sds = jax.eval_shape(
+                lambda: init_train_state(cfg, jax.random.PRNGKey(0), hyper)
+            )
+            state_spec = _state_specs(state_sds, mesh, rules)
+            state_shard = _sharding_tree(state_spec, mesh)
+            step = make_train_step(cfg, hyper)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shard, batch_shard),
+                out_shardings=(state_shard, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif spec.kind == "prefill":
+            params_sds = jax.eval_shape(
+                lambda: _abstract_params(cfg))
+            params_spec = params_partition_specs(params_sds, mesh, rules)
+            params_shard = _sharding_tree(params_spec, mesh)
+            step = make_prefill_step(cfg, max_len=spec.seq_len)
+            jitted = jax.jit(step, in_shardings=(params_shard, batch_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            params_sds = jax.eval_shape(lambda: _abstract_params(cfg))
+            params_spec = params_partition_specs(params_sds, mesh, rules)
+            params_shard = _sharding_tree(params_spec, mesh)
+            cache_sds = specs["cache"]
+            cache_spec = cache_partition_specs(cache_sds, mesh, rules)
+            cache_shard = _sharding_tree(cache_spec, mesh)
+            step = make_decode_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_shard, cache_shard, batch_shard),
+                out_shardings=(None, cache_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_sds, cache_sds, batch_sds)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    roof = roofline_from_compiled(compiled, mesh.size, HW_V5E, hlo_text=hlo)
+
+    # MODEL_FLOPS reference
+    params_sds = jax.eval_shape(lambda: _abstract_params(cfg))
+    moe_frac = None
+    if cfg.moe is not None:
+        moe_frac = cfg.moe.top_k / cfg.moe.num_experts
+    n_total, n_active = count_params(params_sds, moe_frac)
+    tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    mf = model_flops("train" if spec.kind == "train" else "serve",
+                     n_active, tokens)
+    global_hlo_flops = roof["per_device_flops"] * mesh.size
+    # analytic correction for within-layer loops counted once by XLA
+    inner_fix = analytic_inner_loop_flops(cfg, spec.seq_len,
+                                          spec.global_batch, spec.kind)
+    corrected = global_hlo_flops + inner_fix
+    compute_s_corr = corrected / mesh.size / HW_V5E.peak_flops
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": spec.kind,
+        "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "attention_mode": attention_mode,
+        "seq_len": spec.seq_len,
+        "global_batch": spec.global_batch,
+        "tokens_per_step": tokens,
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops": mf,
+        "hlo_flops_global": global_hlo_flops,
+        "inner_loop_flops_correction": inner_fix,
+        "hlo_flops_corrected": corrected,
+        "compute_s_corrected": compute_s_corr,
+        "useful_flops_ratio": (mf / corrected if corrected else None),
+        "unrolled": unroll,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        **roof,
+    }
+    return record
+
+
+def _abstract_params(cfg):
+    from repro.models.transformer import init_model
+
+    return init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _state_specs(state_sds, mesh, rules):
+    """PartitionSpecs for the full TrainState (params + adamw mirrors)."""
+    pspec = params_partition_specs(state_sds["params"], mesh, rules)
+    out = {
+        "params": pspec,
+        "opt": {
+            "mu": pspec,
+            "nu": pspec,
+            "step": P(),
+        },
+        "step": P(),
+    }
+    if "residuals" in state_sds:
+        out["residuals"] = pspec
+    return out
+
+
+HBM_BYTES = 16e9  # TPU v5e per-chip HBM
+
+
+def _fits(mem: dict) -> Optional[bool]:
+    if not mem:
+        return None
+    total = (mem.get("temp_size_in_bytes") or 0) + \
+        (mem.get("argument_size_in_bytes") or 0)
+    return bool(total < 0.95 * HBM_BYTES)
+
+
+def _accum_start(arch: str) -> int:
+    from repro.models.transformer import init_model
+
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    n, _ = count_params(sds)
+    return 1 if n < 4e9 else (4 if n < 2e10 else 8)
+
+
+def measure_cell(cell, mesh, mesh_name):
+    """Full per-cell protocol.
+
+    single-pod: (a) scanned compiles pick the smallest grad_accum whose
+    temp+args memory fits HBM (train shapes) and give the realistic
+    memory_analysis (while-loop buffer reuse); (b) an unrolled compile gives
+    exact per-layer flops + collective bytes for the roofline.
+    multi-pod: one scanned compile proves the pod-axis sharding.
+    """
+    if mesh_name != "single":
+        rec = lower_cell(cell.arch, cell.shape, mesh, mesh_name,
+                         cell.attention_mode, unroll=False)
+        rec["fits_hbm"] = _fits(rec.get("memory_analysis"))
+        return rec
+
+    spec = SHAPES[cell.shape]
+    # fast mode: scanned compile + multiply per-group loop counts by the trip
+    # count (approximation, flagged in the record — used when unrolled
+    # compiles of the largest archs exceed the CPU-container budget).
+    if os.environ.get("REPRO_DRYRUN_FAST"):
+        cfg = get_config(cell.arch, attention_mode=cell.attention_mode)
+        g = cfg.num_scanned_groups
+        rec = lower_cell(cell.arch, cell.shape, mesh, mesh_name,
+                         cell.attention_mode, unroll=False)
+        for key in ("per_device_flops", "per_device_collective_bytes",
+                    "per_device_bytes"):
+            rec[key] = rec[key] * g
+        rec["hlo_flops_global"] = rec["per_device_flops"] * mesh.size
+        rec["hlo_flops_corrected"] = (rec["hlo_flops_global"]
+                                      + rec["inner_loop_flops_correction"])
+        rec["compute_s"] = rec["per_device_flops"] / HW_V5E.peak_flops
+        rec["compute_s_corrected"] = (rec["hlo_flops_corrected"] / mesh.size
+                                      / HW_V5E.peak_flops)
+        rec["memory_s"] = rec["per_device_bytes"] / HW_V5E.hbm_bw
+        rec["collective_s"] = (rec["per_device_collective_bytes"]
+                               / HW_V5E.link_bw)
+        rec["useful_flops_ratio"] = (rec["model_flops"]
+                                     / rec["hlo_flops_corrected"])
+        for c in rec["collectives"].values():
+            c["bytes"] *= g
+            c["count"] *= g
+        rec["approx_scaled_by_groups"] = g
+        terms = {"compute": rec["compute_s_corrected"],
+                 "memory": rec["memory_s"],
+                 "collective": rec["collective_s"]}
+        rec["dominant"] = max(terms, key=terms.get)
+        rec["fits_hbm"] = _fits(rec.get("memory_analysis"))
+        rec["grad_accum"] = 1
+        return rec
+
+    mem_rec = None
+    grad_accum = 1
+    if spec.kind == "train":
+        accum = _accum_start(cell.arch)
+        while True:
+            mem_rec = lower_cell(cell.arch, cell.shape, mesh, mesh_name,
+                                 cell.attention_mode, unroll=False,
+                                 hyper=TrainHyper(grad_accum=accum))
+            if _fits(mem_rec.get("memory_analysis")) or accum >= 16:
+                break
+            accum *= 2
+        grad_accum = accum
+    else:
+        mem_rec = lower_cell(cell.arch, cell.shape, mesh, mesh_name,
+                             cell.attention_mode, unroll=False)
+
+    rec = lower_cell(cell.arch, cell.shape, mesh, mesh_name,
+                     cell.attention_mode, unroll=True)
+    rec["grad_accum"] = grad_accum
+    rec["memory_analysis_scanned"] = mem_rec.get("memory_analysis")
+    rec["fits_hbm"] = _fits(mem_rec.get("memory_analysis"))
+    rec["compile_s_scanned"] = mem_rec.get("compile_s")
+    return rec
+
+
+def run_cells(mesh_names, archs, shapes, force=False, fail_fast=False):
+    arch_cfgs = {a: get_config(a) for a in archs}
+    cells = enumerate_cells(archs, arch_cfgs, shapes)
+    summary = []
+    for mesh_name in mesh_names:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        out_dir = RESULTS_DIR / mesh_name
+        out_dir.mkdir(parents=True, exist_ok=True)
+        for cell in cells:
+            out_path = out_dir / f"{cell.arch}__{cell.shape}.json"
+            if cell.skipped:
+                rec = {
+                    "arch": cell.arch, "shape": cell.shape,
+                    "mesh": mesh_name, "skipped": True,
+                    "skip_reason": cell.skip_reason,
+                }
+                out_path.write_text(json.dumps(rec, indent=2))
+                summary.append((cell.arch, cell.shape, mesh_name, "SKIP"))
+                print(f"[dryrun] SKIP  {cell.arch:22s} {cell.shape:12s} "
+                      f"{mesh_name}: {cell.skip_reason}", flush=True)
+                continue
+            if out_path.exists() and not force:
+                summary.append((cell.arch, cell.shape, mesh_name, "CACHED"))
+                print(f"[dryrun] CACHE {cell.arch:22s} {cell.shape:12s} "
+                      f"{mesh_name}", flush=True)
+                continue
+            try:
+                rec = measure_cell(cell, mesh, mesh_name)
+                rec["skipped"] = False
+                out_path.write_text(json.dumps(rec, indent=2))
+                summary.append((cell.arch, cell.shape, mesh_name, "OK"))
+                print(
+                    f"[dryrun] OK    {cell.arch:22s} {cell.shape:12s} "
+                    f"{mesh_name} compile={rec['compile_s']:.1f}s "
+                    f"dom={rec['dominant']} "
+                    f"comp={rec['compute_s']:.4f}s "
+                    f"mem={rec['memory_s']:.4f}s "
+                    f"coll={rec['collective_s']:.4f}s",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 - record failures
+                summary.append((cell.arch, cell.shape, mesh_name, "FAIL"))
+                err = {"arch": cell.arch, "shape": cell.shape,
+                       "mesh": mesh_name, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                (out_dir / f"{cell.arch}__{cell.shape}.FAILED.json"
+                 ).write_text(json.dumps(err, indent=2))
+                print(f"[dryrun] FAIL  {cell.arch:22s} {cell.shape:12s} "
+                      f"{mesh_name}: {e}", flush=True)
+                if fail_fast:
+                    raise
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (see configs)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all archs x all shapes")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run requires 512 host devices, got {len(jax.devices())} "
+        "(XLA_FLAGS must be set before jax import)"
+    )
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    mesh_names = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    summary = run_cells(mesh_names, archs, shapes, force=args.force,
+                        fail_fast=args.fail_fast)
+    n_ok = sum(1 for s in summary if s[3] in ("OK", "CACHED"))
+    n_skip = sum(1 for s in summary if s[3] == "SKIP")
+    n_fail = sum(1 for s in summary if s[3] == "FAIL")
+    print(f"\n[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Assigned input shapes and per-(arch x shape) cell enumeration.
+
+LM shapes (assignment):
+  train_4k     seq_len=4096,   global_batch=256  -> train_step
+  prefill_32k  seq_len=32768,  global_batch=32   -> prefill (serve)
+  decode_32k   seq_len=32768,  global_batch=128  -> serve_step (1 new token,
+                                                   cache of seq_len)
+  long_500k    seq_len=524288, global_batch=1    -> long-context serve_step
+
+Skip rules (DESIGN.md §6):
+  * encoder-only archs (hubert) have no decode -> decode_32k & long_500k skip;
+  * long_500k needs sub-quadratic attention -> exact softmax archs run it in
+    the paper's RM linear-attention mode ("rm"); SSM/hybrid archs run
+    natively. The attention mode used is recorded per cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins only — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+VLM_PATCHES = 256  # vision_stub prefix length carved out of seq_len
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    attention_mode: str            # mode this cell runs under
+    skipped: bool = False
+    skip_reason: str = ""
+
+
+def enumerate_cells(archs: List[str], arch_cfgs: Dict[str, ModelConfig],
+                    shapes: Optional[List[str]] = None) -> List[Cell]:
+    cells = []
+    for arch in archs:
+        cfg = arch_cfgs[arch]
+        attention_free = not any(
+            b.split("_")[0] in ("attn", "mla") for b in cfg.block_pattern
+        )
+        for sname in shapes or SHAPES:
+            spec = SHAPES[sname]
+            if spec.kind == "decode" and not cfg.causal:
+                cells.append(Cell(arch, sname, cfg.attention_mode, True,
+                                  "encoder-only: no decode step"))
+                continue
+            mode = cfg.attention_mode
+            if sname == "long_500k":
+                # sub-quadratic requirement: exact-attention archs switch to
+                # the paper's RM linear attention; SSM archs run natively.
+                if not attention_free:
+                    mode = "rm"
+            cells.append(Cell(arch, sname, mode))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    b, t = global_batch, seq_len
+    if cfg.frontend == "audio_stub":
+        return {
+            "embeds": _sds((b, t, cfg.d_model), jnp.bfloat16),
+            "targets": _sds((b, t), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        t_text = t - VLM_PATCHES
+        return {
+            "embeds": _sds((b, VLM_PATCHES, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((b, t_text), jnp.int32),
+            "targets": _sds((b, t_text), jnp.int32),
+        }
+    return {
+        "tokens": _sds((b, t), jnp.int32),
+        "targets": _sds((b, t), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    specs = train_batch_specs(cfg, seq_len, global_batch)
+    specs.pop("targets", None)
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, global_batch: int):
+    return {
+        "tokens": _sds((global_batch, 1), jnp.int32),
+        "positions": _sds((global_batch,), jnp.int32),
+    }
+
+
+def decode_cache_specs(cfg: ModelConfig, global_batch: int, max_len: int):
+    """Abstract cache pytree via eval_shape (no allocation)."""
+    from repro.models.transformer import init_decode_cache
+
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, global_batch, max_len)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """The full abstract input set for a cell, keyed by step kind."""
+    spec = SHAPES[shape_name]
+    if spec.kind == "train":
+        return {"batch": train_batch_specs(cfg, spec.seq_len, spec.global_batch)}
+    if spec.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, spec.seq_len,
+                                             spec.global_batch)}
+    if spec.kind == "decode":
+        return {
+            "batch": decode_batch_specs(cfg, spec.global_batch),
+            "cache": decode_cache_specs(cfg, spec.global_batch, spec.seq_len),
+        }
+    raise ValueError(shape_name)

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 50 --batch 4 --seq 128
+
+On hardware, the same entrypoint builds the production mesh and shards the
+run; on this CPU container use --smoke (reduced config) for real execution,
+or the dry-run for full-scale lowering.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.steps import TrainHyper
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--attention-mode", default=None,
+                    choices=[None, "exact", "rm"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "host", "single", "multi"])
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="TP size for --mesh host")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke,
+                     attention_mode=args.attention_mode)
+    if cfg.frontend != "none":
+        raise SystemExit(
+            f"{args.arch} needs modality inputs; use examples/train_lm.py "
+            "with an LM arch, or the dry-run for full-scale lowering.")
+    data = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                              global_batch=args.batch)
+    mesh = {
+        "none": None,
+        "host": lambda: make_host_mesh(args.model_parallel),
+        "single": lambda: make_production_mesh(),
+        "multi": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]
+    mesh = mesh() if callable(mesh) else mesh
+    hyper = TrainHyper(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                       total_steps=args.steps, grad_accum=args.grad_accum)
+    trainer = Trainer(cfg, hyper, data, ckpt_dir=args.ckpt_dir, mesh=mesh)
+    trainer.train(args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Model zoo: composable JAX transformer / SSM / hybrid blocks with the
+paper's RM linear attention as a first-class attention mode."""
+from repro.models.config import (
+    MLAConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RMAttentionConfig,
+    XLSTMConfig,
+)
+from repro.models.transformer import (
+    init_model,
+    forward,
+    loss_fn,
+    init_decode_cache,
+    decode_step,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "MambaConfig",
+    "XLSTMConfig",
+    "RMAttentionConfig",
+    "init_model",
+    "forward",
+    "loss_fn",
+    "init_decode_cache",
+    "decode_step",
+    "prefill",
+]

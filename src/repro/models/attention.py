@@ -1,0 +1,391 @@
+"""Attention: exact GQA (+SWA, qk-norm, QKV bias), DeepSeek MLA, and the
+paper's Random-Maclaurin linear attention mode.
+
+Modes (cfg.attention_mode):
+  * "exact" — softmax attention; decode uses a ring-buffer KV cache.
+  * "rm"    — q/k are per-head l2-normalized, scaled, and featurized with a
+              static RM plan for the exponential dot product kernel
+              (DESIGN.md §2); attention is linear in the features. Decode
+              keeps an O(1) state (S [F, dv], n [F]) instead of a KV cache —
+              this is what makes the `long_500k` shape feasible.
+
+All forward paths take ``positions [B, T]`` so prefill/decode share code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maclaurin import ExponentialDotProductKernel
+from repro.core.static_plan import PlanMeta, apply_plan, init_omegas, make_plan_meta
+from repro.kernels.rm_attention.ops import (
+    rm_attention_causal,
+    rm_attention_decode_step,
+    rm_attention_noncausal,
+    rm_attention_prefill_final_state,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, normal_init, rms_norm_headwise
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RM plan (shared helper)
+# ---------------------------------------------------------------------------
+def rm_plan_for(cfg: ModelConfig, input_dim: int) -> PlanMeta:
+    rm = cfg.rm
+    kernel = ExponentialDotProductKernel(rm.sigma2)
+    return make_plan_meta(
+        kernel,
+        input_dim,
+        rm.num_features,
+        p=rm.p,
+        measure=rm.measure,
+        stratified=rm.stratified,
+        n_max=rm.n_max,
+        radius=rm.qk_scale,
+        seed=0,
+    )
+
+
+def _rm_featurize(
+    params: Params, cfg: ModelConfig, meta: PlanMeta, x: jax.Array
+) -> jax.Array:
+    """[B, T, H, dh] -> [B, H, T, F]: l2-normalize, scale, featurize."""
+    xf = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(xf, axis=-1, keepdims=True)
+    xhat = xf / jnp.maximum(norm, 1e-6)
+    if cfg.rm.learnable_scale:
+        scale = jax.nn.softplus(params["rm_scale"]).astype(jnp.float32)
+    else:
+        scale = jnp.float32(cfg.rm.qk_scale)
+    z = apply_plan(meta, params["rm_omegas"], xhat * scale)
+    return jnp.transpose(z, (0, 2, 1, 3))  # [B, H, T, F]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    std = cfg.init_std
+    params: Params = {
+        "wq": normal_init(ks[0], (d, h * dh), std, dtype),
+        "wk": normal_init(ks[1], (d, hkv * dh), std, dtype),
+        "wv": normal_init(ks[2], (d, hkv * dh), std, dtype),
+        "wo": normal_init(ks[3], (h * dh, d), std, dtype),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * dh,), dtype)
+        params["bk"] = jnp.zeros((hkv * dh,), dtype)
+        params["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        params["q_norm_scale"] = jnp.ones((dh,), dtype)
+        params["k_norm_scale"] = jnp.ones((dh,), dtype)
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, dh)
+        params["rm_omegas"] = init_omegas(meta, ks[4])
+        if cfg.rm.learnable_scale:
+            # softplus^-1(qk_scale)
+            params["rm_scale"] = jnp.asarray(
+                math.log(math.expm1(cfg.rm.qk_scale)), dtype=jnp.float32
+            )
+    return params
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array):
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, t, h, dh)
+    k = k.reshape(b, t, hkv, dh)
+    v = v.reshape(b, t, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, params["q_norm_scale"], cfg.norm_eps)
+        k = rms_norm_headwise(k, params["k_norm_scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def _apply_positional(cfg: ModelConfig, q, k, positions):
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _repeat_kv(x: jax.Array, rep: int) -> jax.Array:
+    if rep == 1:
+        return x
+    return jnp.repeat(x, rep, axis=2)
+
+
+# Above this sequence length, exact attention switches to the blockwise
+# online-softmax formulation (bounded memory; flash-attention schedule in
+# XLA). Below it, the simple einsum is faster to compile and plenty small.
+_BLOCKWISE_THRESHOLD = 2048
+_BLOCK_Q = 1024
+_BLOCK_K = 1024
+
+
+def _mask_block(cfg: ModelConfig, qp, kp):
+    """qp: [.., bq], kp: [.., bk] -> bool [.., bq, bk]."""
+    m = jnp.ones(qp.shape + (kp.shape[-1],), dtype=bool)
+    if cfg.causal:
+        m &= qp[..., :, None] >= kp[..., None, :]
+    if cfg.sliding_window > 0:
+        m &= (qp[..., :, None] - kp[..., None, :]) < cfg.sliding_window
+    return m
+
+
+def _softmax_attention_small(cfg, q, k, v, q_positions, k_positions):
+    dh = q.shape[-1]
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(dh)
+    mask = _mask_block(cfg, q_positions, k_positions)[:, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def _softmax_attention_blockwise(cfg, q, k, v, q_positions, k_positions):
+    """Memory-efficient exact attention: scan over KV blocks with online
+    softmax (running max / sum) per Q block. Peak score memory is
+    [B, H, block_q, block_k] instead of [B, H, T, T].
+
+    Masked-out blocks are still computed then zeroed (static shapes); the
+    causal/window FLOP overhead this costs is measured in EXPERIMENTS.md
+    §Roofline and attacked in the §Perf hillclimb where it matters.
+    """
+    b, tq, h, dh = q.shape
+    tk = k.shape[1]
+    dv = v.shape[-1]  # may differ from dh (MLA: qk 192, v 128)
+    bq, bk = min(_BLOCK_Q, tq), min(_BLOCK_K, tk)
+    pad_q, pad_k = (-tq) % bq, (-tk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, ((0, 0), (0, pad_q)))
+    kpos = jnp.pad(k_positions, ((0, 0), (0, pad_k)),
+                   constant_values=jnp.iinfo(jnp.int32).max)
+    nq, nk = (tq + pad_q) // bq, (tk + pad_k) // bk
+    scale = 1.0 / math.sqrt(dh)
+
+    q_c = qp.reshape(b, nq, bq, h, dh)
+    k_c = kp.reshape(b, nk, bk, h, dh)
+    v_c = vp.reshape(b, nk, bk, h, dv)
+    qpos_c = qpos.reshape(b, nq, bq)
+    kpos_c = kpos.reshape(b, nk, bk)
+
+    def q_block(qi_data):
+        q_i, qpos_i = qi_data            # [B,bq,H,dh], [B,bq]
+
+        def kv_step(carry, kj_data):
+            m, l, acc = carry
+            k_j, v_j, kpos_j = kj_data
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            mask = _mask_block(cfg, qpos_i, kpos_j)[:, None]
+            # padded keys carry sentinel positions -> always invalid
+            mask &= (kpos_j < jnp.iinfo(jnp.int32).max)[:, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_j.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k_c.swapaxes(0, 1), v_c.swapaxes(0, 1), kpos_c.swapaxes(0, 1)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2)        # [B,bq,H,dh]
+
+    outs = jax.lax.map(q_block, (q_c.swapaxes(0, 1), qpos_c.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(b, nq * bq, h, dv)[:, :tq]
+    return out.astype(v.dtype)
+
+
+def _softmax_attention(
+    cfg: ModelConfig, q, k, v, q_positions, k_positions
+) -> jax.Array:
+    """q: [B,Tq,H,dh]; k,v: [B,Tk,H,dh]; positions give the mask."""
+    if max(q.shape[1], k.shape[1]) > _BLOCKWISE_THRESHOLD:
+        return _softmax_attention_blockwise(cfg, q, k, v, q_positions,
+                                            k_positions)
+    return _softmax_attention_small(cfg, q, k, v, q_positions, k_positions)
+
+
+def attention_forward(
+    params: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    """Full-sequence attention (training / prefill). x: [B, T, d]."""
+    b, t, _ = x.shape
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x)
+    q, k = _apply_positional(cfg, q, k, positions)
+    k = _repeat_kv(k, cfg.q_per_kv)
+    v = _repeat_kv(v, cfg.q_per_kv)
+
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, dh)
+        zq = _rm_featurize(params, cfg, meta, q)
+        zk = _rm_featurize(params, cfg, meta, k)
+        v_t = jnp.transpose(v, (0, 2, 1, 3))  # [B,H,T,dv]
+        if cfg.causal:
+            out = rm_attention_causal(
+                zq, zk, v_t, chunk=cfg.rm.chunk, eps=cfg.rm.eps
+            )
+        else:
+            out = rm_attention_noncausal(zq, zk, v_t, eps=cfg.rm.eps)
+        out = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
+    else:
+        out = _softmax_attention(cfg, q, k, v, positions, positions)
+
+    return out.reshape(b, t, h * dh) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+def init_attention_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> Dict[str, jax.Array]:
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, dh)
+        f = meta.output_dim
+        return {
+            "rm_s": jnp.zeros((batch, h, f, dh), jnp.float32),
+            "rm_n": jnp.zeros((batch, h, f), jnp.float32),
+        }
+    window = cfg.sliding_window or max_len
+    size = min(max_len, window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, size, hkv, dh), dtype),
+        "v": jnp.zeros((batch, size, hkv, dh), dtype),
+    }
+
+
+def attention_decode(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,           # [B, 1, d]
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,   # [B] current position of the new token
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = x.shape[0]
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x)          # [B,1,*,dh]
+    q, k = _apply_positional(cfg, q, k, positions[:, None])
+
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, dh)
+        k = _repeat_kv(k, cfg.q_per_kv)
+        v = _repeat_kv(v, cfg.q_per_kv)
+        zq = _rm_featurize(params, cfg, meta, q)[:, :, 0]  # [B,H,F]
+        zk = _rm_featurize(params, cfg, meta, k)[:, :, 0]
+        v0 = jnp.transpose(v, (0, 2, 1, 3))[:, :, 0]       # [B,H,dv]
+        out, s_new, n_new = rm_attention_decode_step(
+            zq, zk, v0, cache["rm_s"], cache["rm_n"], eps=cfg.rm.eps
+        )
+        y = out[:, None].reshape(b, 1, h * dh).astype(x.dtype) @ params["wo"]
+        return y, {"rm_s": s_new, "rm_n": n_new}
+
+    # exact: ring-buffer write at slot positions % size
+    size = cache["k"].shape[1]
+    slots = (positions % size).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, slots].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slots].set(v[:, 0].astype(cache["v"].dtype))
+
+    # positions stored in each slot (for mask + rope-consistency)
+    slot_ids = jnp.arange(size)[None, :]                    # [1, S]
+    # slot s holds absolute position: the largest p <= positions with p%size==s
+    abs_pos = positions[:, None] - ((positions[:, None] - slot_ids) % size)
+    valid = abs_pos >= 0
+    if cfg.sliding_window > 0:
+        valid &= (positions[:, None] - abs_pos) < cfg.sliding_window
+
+    kk = _repeat_kv(k_cache, cfg.q_per_kv)
+    vv = _repeat_kv(v_cache, cfg.q_per_kv)
+    scores = jnp.einsum(
+        "bhd,bshd->bhs", q[:, 0].astype(jnp.float32), kk.astype(jnp.float32)
+    ) / math.sqrt(dh)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs.astype(vv.dtype), vv)
+    y = out.reshape(b, 1, h * dh) @ params["wo"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def attention_prefill_cache(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,          # [B, T, d] prompt
+    positions: jax.Array,  # [B, T]
+    max_len: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Run prefill AND build the decode cache in one pass."""
+    b, t, _ = x.shape
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x)
+    q, k = _apply_positional(cfg, q, k, positions)
+
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, dh)
+        kr = _repeat_kv(k, cfg.q_per_kv)
+        vr = _repeat_kv(v, cfg.q_per_kv)
+        zq = _rm_featurize(params, cfg, meta, q)
+        zk = _rm_featurize(params, cfg, meta, kr)
+        v_t = jnp.transpose(vr, (0, 2, 1, 3))
+        out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
+                                  eps=cfg.rm.eps)
+        s, n = rm_attention_prefill_final_state(zk, v_t)
+        y = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
+        y = y.reshape(b, t, h * dh) @ params["wo"]
+        return y, {"rm_s": s, "rm_n": n}
+
+    kr = _repeat_kv(k, cfg.q_per_kv)
+    vr = _repeat_kv(v, cfg.q_per_kv)
+    out = _softmax_attention(cfg, q, kr, vr, positions, positions)
+    y = out.reshape(b, t, h * dh) @ params["wo"]
+
+    cache = init_attention_cache(cfg, b, max_len, k.dtype)
+    size = cache["k"].shape[1]
+    if t <= size:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+        )
+    else:  # keep last `size` tokens (ring layout: slot = pos % size)
+        k_tail = k[:, -size:]
+        v_tail = v[:, -size:]
+        tail_pos = positions[:, -size:]
+        slots = (tail_pos % size).astype(jnp.int32)
+        bidx = jnp.arange(b)[:, None]
+        k_cache = cache["k"].at[bidx, slots].set(k_tail.astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, slots].set(v_tail.astype(cache["v"].dtype))
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,175 @@
+"""Unified model configuration covering all 10 assigned architectures.
+
+One frozen dataclass; family-specific sub-configs are optional fields. The
+layer stack is ``block_pattern`` repeated ``num_layers / len(block_pattern)``
+times (scanned over repeats for compile efficiency), optionally preceded by
+``first_k_dense`` unscanned dense layers (DeepSeek-V2 style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = [
+    "RMAttentionConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "MambaConfig",
+    "XLSTMConfig",
+    "ModelConfig",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RMAttentionConfig:
+    """The paper's technique as an attention mode (DESIGN.md §2).
+
+    q/k are l2-normalized per head, scaled by ``qk_scale`` and mapped through
+    a Random-Maclaurin plan for exp(<q,k>/sigma2); attention becomes linear in
+    the features. ``measure='proportional', stratified=True`` is the
+    beyond-paper low-variance default; ``measure='geometric',
+    stratified=False`` is the paper-faithful Algorithm 1 sampler.
+    """
+
+    num_features: int = 256
+    sigma2: float = 1.0
+    qk_scale: float = 1.0
+    p: float = 2.0
+    measure: str = "proportional"
+    stratified: bool = True
+    n_max: int = 8
+    chunk: int = 128
+    eps: float = 1e-4
+    learnable_scale: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0           # per-expert hidden dim
+    num_shared_experts: int = 0    # DeepSeek shared experts
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+    # "local": shard_map-local dispatch per DP shard + ff-sharded experts +
+    #          one psum over "model" (default — scales to 1M tokens/step);
+    # "einsum": GShard one-hot dispatch, O(G*E*C*d) — toy scale / ablation.
+    dispatch: str = "local"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention dims."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0           # 0 = no query compression (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 = ceil(d_model / 16)
+    scan_chunk: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor: float = 2.0       # mLSTM up-projection
+    conv_kernel: int = 4
+    slstm_ff_factor: float = 1.3333
+    chunk: int = 64                # mLSTM chunkwise parallel size
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = "model"
+    family: str = "dense"          # dense | moe | vlm | audio | hybrid | ssm
+
+    # trunk dims
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0              # 0 = d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    max_seq_len: int = 8192
+
+    # block structure
+    block_pattern: Tuple[str, ...] = ("attn_mlp",)
+    first_k_dense: int = 0         # unscanned leading dense layers
+    causal: bool = True            # False => encoder-only (hubert)
+    frontend: str = "none"         # none | vision_stub | audio_stub
+
+    # attention flavor
+    attention_kind: str = "gqa"    # gqa | mla
+    attention_mode: str = "exact"  # exact | rm  (rm = the paper's technique)
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: int = 0        # 0 = full attention
+    rope_theta: float = 10000.0
+    pos_embedding: str = "rope"    # rope | sinusoidal | none
+
+    # norms / mlp
+    norm_kind: str = "rmsnorm"     # rmsnorm | layernorm | nonparametric_ln
+    mlp_kind: str = "swiglu"       # swiglu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0
+
+    # sub-configs
+    rm: RMAttentionConfig = RMAttentionConfig()
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # init
+    init_std: float = 0.02
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True             # activation checkpointing on scanned blocks
+    # fully unroll the layer scan. False = fast compiles (tests, training);
+    # True = dry-run/roofline mode, where XLA cost_analysis must see every
+    # layer's ops (while-loop bodies are counted once, DESIGN.md §8).
+    scan_unroll: bool = False
+
+    # ---------------- derived ----------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def num_scanned_groups(self) -> int:
+        n = self.num_layers - self.first_k_dense
+        period = len(self.block_pattern)
+        if n % period:
+            raise ValueError(
+                f"{self.name}: {n} scanned layers not divisible by pattern "
+                f"period {period}"
+            )
+        return n // period
+
+    def validate(self) -> "ModelConfig":
+        assert self.num_heads % self.num_kv_heads == 0
+        if self.attention_kind == "mla":
+            assert self.mla is not None, "mla config required"
+        if any("moe" in b for b in self.block_pattern):
+            assert self.moe is not None, "moe config required"
+        if any("mamba" in b for b in self.block_pattern):
+            assert self.mamba is not None, "mamba config required"
+        if any(b in ("mlstm", "slstm") for b in self.block_pattern):
+            assert self.xlstm is not None, "xlstm config required"
+        _ = self.num_scanned_groups
+        return self

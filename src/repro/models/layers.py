@@ -1,0 +1,159 @@
+"""Common layers: norms, MLPs, rotary embeddings, embeddings, heads.
+
+Functional style: ``init_*`` returns a param dict, ``apply`` functions are
+pure. Param dicts use plain nested dicts so they compose with pjit sharding
+rules by path (see repro.launch.sharding).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, std, dtype):
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: int, dtype) -> Params:
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if cfg.norm_kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    if cfg.norm_kind == "nonparametric_ln":  # OLMo: no learnable params
+        return {}
+    raise ValueError(cfg.norm_kind)
+
+
+def apply_norm(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * params["scale"].astype(jnp.float32)
+    else:  # layernorm / nonparametric_ln
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        if "scale" in params:
+            out = out * params["scale"].astype(jnp.float32)
+        if "bias" in params:
+            out = out + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rms_norm_headwise(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Per-head qk-norm (Qwen3): normalize the trailing head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key: jax.Array, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    std = cfg.init_std
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": normal_init(k1, (d, d_ff), std, dtype),
+            "w_up": normal_init(k2, (d, d_ff), std, dtype),
+            "w_down": normal_init(k3, (d_ff, d), std, dtype),
+        }
+    if cfg.mlp_kind == "gelu":
+        return {
+            "w_up": normal_init(k1, (d, d_ff), std, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": normal_init(k2, (d_ff, d), std, dtype),
+            "b_down": jnp.zeros((d,), dtype),
+        }
+    raise ValueError(cfg.mlp_kind)
+
+
+def apply_mlp(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        gate = x @ params["w_gate"]
+        up = x @ params["w_up"]
+        return (jax.nn.silu(gate) * up) @ params["w_down"]
+    up = x @ params["w_up"] + params["b_up"]
+    return jax.nn.gelu(up) @ params["w_down"] + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (half-rotation / llama style)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, Dh]; positions: [B, T] (int32)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,T,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    """[B, T] -> [B, T, dim] classic transformer sin/cos table."""
+    half = dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def init_embedding(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    params = {
+        "embedding": normal_init(k1, (cfg.vocab_size, cfg.d_model),
+                                 cfg.init_std, dtype)
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = normal_init(
+            k2, (cfg.d_model, cfg.vocab_size), cfg.init_std, dtype
+        )
+    return params
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 compute_dtype) -> jax.Array:
+    return params["embedding"].astype(compute_dtype)[tokens]
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embedding"].astype(x.dtype).T
+    else:
+        logits = x @ params["unembed"].astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.logits_softcap > 0.0:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,214 @@
+"""Mamba-1 selective SSM block (for Jamba's 7-of-8 layers).
+
+Training/prefill uses a chunked associative scan: the sequence is split into
+``scan_chunk`` slices scanned sequentially (O(T/C) steps) with a parallel
+associative scan inside each chunk — the chunk size bounds the materialized
+[B, C, d_in, N] state tensor (DESIGN.md §5 memory notes). Decode is the O(1)
+recurrence with (conv window, ssm state) carried in the cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import normal_init
+
+Params = Dict[str, jax.Array]
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.mamba.dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    n = mc.d_state
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    std = cfg.init_std
+    params: Params = {
+        "w_in": normal_init(ks[0], (d, 2 * d_in), std, dtype),
+        "conv_w": normal_init(ks[1], (mc.d_conv, d_in), std, dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": normal_init(ks[2], (d_in, r + 2 * n), std, dtype),
+        "dt_proj": normal_init(ks[3], (r, d_in), std, dtype),
+        "dt_bias": jnp.full((d_in,), math.log(math.expm1(0.01)), dtype),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                             (d_in, n))
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": normal_init(ks[4], (d_in, d), std, dtype),
+    }
+    return params
+
+
+def _ssm_coeffs(params: Params, cfg: ModelConfig, xc: jax.Array):
+    """xc: [B, T, d_in] (post-conv). Returns a_bar, bx, c  for the scan."""
+    mc = cfg.mamba
+    n = mc.d_state
+    r = _dt_rank(cfg)
+    proj = xc @ params["x_proj"]                                  # [B,T,r+2n]
+    dt, b_in, c_in = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ params["dt_proj"] + params["dt_bias"].astype(dt.dtype)
+    ).astype(jnp.float32)                                         # [B,T,d_in]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))             # [d_in, N]
+    a_bar = jnp.exp(dt[..., None] * a)                            # [B,T,d_in,N]
+    # Euler-discretized input: dt * B * x
+    bx = (
+        dt[..., None]
+        * b_in[:, :, None, :].astype(jnp.float32)
+        * xc[..., None].astype(jnp.float32)
+    )                                                             # [B,T,d_in,N]
+    return a_bar, bx, c_in.astype(jnp.float32)
+
+
+def _causal_conv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 init_state: jax.Array = None):
+    """Depthwise causal conv over T. x: [B, T, d_in]."""
+    kk = cfg.mamba.d_conv
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * params["conv_w"][i].astype(x.dtype)
+        for i in range(kk)
+    )
+    return out + params["conv_b"].astype(x.dtype), xp[:, -(kk - 1):]
+
+
+def mamba_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions=None) -> jax.Array:
+    """x: [B, T, d] -> [B, T, d]."""
+    mc = cfg.mamba
+    b, t, d = x.shape
+    d_in = mc.expand * d
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(params, cfg, xs)
+    xc = jax.nn.silu(xc)
+    a_bar, bx, c = _ssm_coeffs(params, cfg, xc)
+
+    chunk = min(mc.scan_chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        a_bar = jnp.pad(a_bar, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nch = tp // chunk
+    a_c = a_bar.reshape(b, nch, chunk, d_in, mc.d_state).swapaxes(0, 1)
+    b_c = bx.reshape(b, nch, chunk, d_in, mc.d_state).swapaxes(0, 1)
+
+    def assoc(elem_a, elem_b):
+        a1, u1 = elem_a
+        a2, u2 = elem_b
+        return a1 * a2, a2 * u1 + u2
+
+    def chunk_step(h, ab):
+        a_i, b_i = ab                                   # [B, C, d_in, N]
+        cum_a, cum_u = jax.lax.associative_scan(assoc, (a_i, b_i), axis=1)
+        h_t = cum_a * h[:, None] + cum_u                # [B, C, d_in, N]
+        return h_t[:, -1], h_t
+
+    h0 = jnp.zeros((b, d_in, mc.d_state), jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    hs = hs.swapaxes(0, 1).reshape(b, tp, d_in, mc.d_state)[:, :t]
+
+    y = jnp.einsum("btdn,btn->btd", hs, c[:, :t])
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["w_out"]
+
+
+def mamba_prefill_cache(
+    params: Params, cfg: ModelConfig, x: jax.Array, positions, max_len: int
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward + final (conv window, ssm state) for decode handoff.
+
+    Runs the same chunked scan as ``mamba_forward`` but keeps the carry.
+    """
+    mc = cfg.mamba
+    b, t, d = x.shape
+    d_in = mc.expand * d
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(params, cfg, xs)
+    xc = jax.nn.silu(xc)
+    a_bar, bx, c = _ssm_coeffs(params, cfg, xc)
+
+    chunk = min(mc.scan_chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        a_bar = jnp.pad(a_bar, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nch = tp // chunk
+    a_c = a_bar.reshape(b, nch, chunk, d_in, mc.d_state).swapaxes(0, 1)
+    b_c = bx.reshape(b, nch, chunk, d_in, mc.d_state).swapaxes(0, 1)
+
+    def assoc(ea, eb):
+        a1, u1 = ea
+        a2, u2 = eb
+        return a1 * a2, a2 * u1 + u2
+
+    def chunk_step(h, ab):
+        a_i, b_i = ab
+        cum_a, cum_u = jax.lax.associative_scan(assoc, (a_i, b_i), axis=1)
+        h_t = cum_a * h[:, None] + cum_u
+        return h_t[:, -1], h_t
+
+    h0 = jnp.zeros((b, d_in, mc.d_state), jnp.float32)
+    h_final, hs = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    hs = hs.swapaxes(0, 1).reshape(b, tp, d_in, mc.d_state)[:, :t]
+
+    y = jnp.einsum("btdn,btn->btd", hs, c[:, :t])
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = y @ params["w_out"]
+
+    kk = mc.d_conv
+    xs_pad = jnp.pad(xs, ((0, 0), (kk - 1, 0), (0, 0)))
+    conv_state = xs_pad[:, -(kk - 1):] if kk > 1 else xs[:, :0]
+    return y, {"conv": conv_state, "ssm": h_final}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(
+    params: Params, cfg: ModelConfig, x: jax.Array, cache, positions=None
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, 1, d]; O(1) per-token recurrence."""
+    mc = cfg.mamba
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(params, cfg, xs, init_state=cache["conv"])
+    xc = jax.nn.silu(xc)
+    a_bar, bx, c = _ssm_coeffs(params, cfg, xc)
+    h = cache["ssm"] * a_bar[:, 0] + bx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])[:, None]
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["w_out"], {"conv": conv_state, "ssm": h}

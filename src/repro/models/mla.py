@@ -1,0 +1,199 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Exact mode caches the compressed latent ``c_kv`` (+ the shared rope key) and
+decodes with the absorbed-projection trick; rm mode featurizes the
+decompressed q/k with the paper's RM plan and keeps the O(1) linear-attention
+state instead of the latent cache (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.static_plan import apply_plan, init_omegas
+from repro.kernels.rm_attention.ops import (
+    rm_attention_causal,
+    rm_attention_decode_step,
+    rm_attention_prefill_final_state,
+)
+from repro.models.attention import NEG_INF, rm_plan_for, _rm_featurize
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, normal_init
+
+Params = Dict[str, jax.Array]
+
+
+def init_mla(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    std = cfg.init_std
+    params: Params = {
+        "w_q": normal_init(ks[0], (d, h * qk_dim), std, dtype),
+        "w_dkv": normal_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                             std, dtype),
+        "kv_norm_scale": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_ukv": normal_init(
+            ks[2], (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+            std, dtype),
+        "w_o": normal_init(ks[3], (h * m.v_head_dim, d), std, dtype),
+    }
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, qk_dim)
+        params["rm_omegas"] = init_omegas(meta, ks[4])
+        if cfg.rm.learnable_scale:
+            params["rm_scale"] = jnp.asarray(
+                math.log(math.expm1(cfg.rm.qk_scale)), dtype=jnp.float32
+            )
+    return params
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def _mla_qkv(params: Params, cfg: ModelConfig, x, positions):
+    """Decompressed q, k, v: [B, T, H, *]."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    nope, rope, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = (x @ params["w_q"]).reshape(b, t, h, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]
+    c_kv, k_pe = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    c_kv = _rms(c_kv, params["kv_norm_scale"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)
+
+    kv = (c_kv @ params["w_ukv"]).reshape(b, t, h, nope + dv)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (b, t, h, rope))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    return q_full, k, v, c_kv, k_pe
+
+
+def mla_forward(params: Params, cfg: ModelConfig, x, positions) -> jax.Array:
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    q, k, v, _, _ = _mla_qkv(params, cfg, x, positions)
+
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, m.qk_nope_head_dim + m.qk_rope_head_dim)
+        zq = _rm_featurize(params, cfg, meta, q)
+        zk = _rm_featurize(params, cfg, meta, k)
+        v_t = jnp.transpose(v, (0, 2, 1, 3))
+        out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
+                                  eps=cfg.rm.eps)
+        out = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
+    else:
+        # blockwise online-softmax for long sequences (see attention.py)
+        from repro.models.attention import _softmax_attention
+
+        out = _softmax_attention(cfg, q, k, v, positions, positions)
+
+    return out.reshape(b, t, h * m.v_head_dim) @ params["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, m.qk_nope_head_dim + m.qk_rope_head_dim)
+        f = meta.output_dim
+        return {
+            "rm_s": jnp.zeros((batch, cfg.num_heads, f, m.v_head_dim),
+                              jnp.float32),
+            "rm_n": jnp.zeros((batch, cfg.num_heads, f), jnp.float32),
+        }
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill_cache(
+    params: Params, cfg: ModelConfig, x, positions, max_len: int
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill forward + build the decode cache (latent or RM state)."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    y = mla_forward(params, cfg, x, positions)
+    if cfg.attention_mode == "rm":
+        q, k, v, _, _ = _mla_qkv(params, cfg, x, positions)
+        meta = rm_plan_for(cfg, m.qk_nope_head_dim + m.qk_rope_head_dim)
+        zk = _rm_featurize(params, cfg, meta, k)
+        v_t = jnp.transpose(v, (0, 2, 1, 3))
+        s, n = rm_attention_prefill_final_state(zk, v_t)
+        return y, {"rm_s": s, "rm_n": n}
+    cache = init_mla_cache(cfg, b, max_len, x.dtype)
+    _, _, _, c_kv, k_pe = _mla_qkv(params, cfg, x, positions)
+    c_cache = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+    pe_cache = jax.lax.dynamic_update_slice(
+        cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype), (0, 0, 0))
+    return y, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
+def mla_decode(
+    params: Params, cfg: ModelConfig, x, cache, positions
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, 1, d]. Exact mode = absorbed-latent attention over the cache."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rope, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q, k, v, c_kv_t, k_pe_t = _mla_qkv(params, cfg, x, positions[:, None])
+
+    if cfg.attention_mode == "rm":
+        meta = rm_plan_for(cfg, nope + rope)
+        zq = _rm_featurize(params, cfg, meta, q)[:, :, 0]
+        zk = _rm_featurize(params, cfg, meta, k)[:, :, 0]
+        v0 = jnp.transpose(v, (0, 2, 1, 3))[:, :, 0]
+        out, s_new, n_new = rm_attention_decode_step(
+            zq, zk, v0, cache["rm_s"], cache["rm_n"], eps=cfg.rm.eps
+        )
+        y = out.reshape(b, 1, h * dv).astype(x.dtype) @ params["w_o"]
+        return y, {"rm_s": s_new, "rm_n": n_new}
+
+    size = cache["c_kv"].shape[1]
+    bidx = jnp.arange(b)
+    c_cache = cache["c_kv"].at[bidx, positions].set(
+        c_kv_t[:, 0].astype(cache["c_kv"].dtype))
+    pe_cache = cache["k_pe"].at[bidx, positions].set(
+        k_pe_t[:, 0, 0].astype(cache["k_pe"].dtype))
+
+    # absorbed scores: q_nope absorbed through w_uk into latent space
+    w_ukv = params["w_ukv"].reshape(m.kv_lora_rank, h, nope + dv)
+    w_uk = w_ukv[..., :nope]                   # [lora, H, nope]
+    w_uv = w_ukv[..., nope:]                   # [lora, H, dv]
+    q_nope, q_pe = q[:, 0, :, :nope], q[:, 0, :, nope:]
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bhl,bsl->bhs", q_lat,
+                        c_cache.astype(jnp.float32))
+    scores += jnp.einsum("bhr,bsr->bhs", q_pe.astype(jnp.float32),
+                         pe_cache.astype(jnp.float32))
+    scores /= math.sqrt(nope + rope)
+    valid = jnp.arange(size)[None, :] <= positions[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    y = out.reshape(b, 1, h * dv).astype(x.dtype) @ params["w_o"]
+    return y, {"c_kv": c_cache, "k_pe": pe_cache}

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN.
+
+Scalable path (``dispatch="local"``, default): the MoE block runs inside a
+``shard_map`` over the data-parallel axes — every DP shard routes and
+dispatches ITS OWN tokens with purely local scatter/gather (no global token
+indices, so SPMD never materializes cross-device permutes), while expert
+weights are column-sharded over the "model" axis (ff dim). Each device
+computes partial expert outputs for all (local) tokens; one psum over
+"model" completes the block — the same collective shape as a dense TP FFN.
+This shards for ANY (num_experts, tensor-parallel) combination, including
+E=8 on tp=16 (Mixtral) and E=64 (DeepSeek).
+
+Ablation path (``dispatch="einsum"``): the classic GShard one-hot dispatch
+einsum, O(G*E*C*d) FLOPs and a materialized [G,E,C] tensor — correct but
+only viable at toy scale; kept for tests and the §Perf before/after story.
+
+Outside a mesh context both paths degrade gracefully to single-device code.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shlib
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import normal_init
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    moe = cfg.moe
+    d, e, ff = cfg.d_model, moe.num_experts, moe.d_ff_expert
+    ks = jax.random.split(key, 7)
+    std = cfg.init_std
+    params: Params = {
+        "router": normal_init(ks[0], (d, e), std, jnp.float32),
+        "w_gate": normal_init(ks[1], (e, d, ff), std, dtype),
+        "w_up": normal_init(ks[2], (e, d, ff), std, dtype),
+        "w_down": normal_init(ks[3], (e, ff, d), std, dtype),
+    }
+    if moe.num_shared_experts > 0:
+        sff = moe.num_shared_experts * ff
+        params["shared_gate"] = normal_init(ks[4], (d, sff), std, dtype)
+        params["shared_up"] = normal_init(ks[5], (d, sff), std, dtype)
+        params["shared_down"] = normal_init(ks[6], (sff, d), std, dtype)
+    return params
+
+
+def _capacity(moe: MoEConfig, num_tokens: int) -> int:
+    cap = int(num_tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(cap, moe.top_k)
+
+
+def _route(params: Params, moe: MoEConfig, xf: jax.Array):
+    """Router probs + normalized top-k. xf: [G, d] (local tokens)."""
+    logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, moe.top_k)
+    top_vals = top_vals / jnp.maximum(
+        jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9
+    )
+    return logits, probs, top_vals, top_idx
+
+
+def _shared_expert_out(params: Params, xf: jax.Array) -> jax.Array:
+    gate = xf @ params["shared_gate"]
+    up = xf @ params["shared_up"]
+    return (jax.nn.silu(gate) * up) @ params["shared_down"]
+
+
+def _moe_core_local(params: Params, cfg: ModelConfig, xf: jax.Array):
+    """Local-token dispatch -> expert FFN -> combine. xf: [G_loc, d].
+
+    Returns (y [G_loc, d] — PARTIAL over the ff shard if weights are
+    column-sharded, aux dict of local scalars). All indices are local.
+    """
+    moe = cfg.moe
+    g, d = xf.shape
+    e, k = moe.num_experts, moe.top_k
+    logits, probs, top_vals, top_idx = _route(params, moe, xf)
+    cap = _capacity(moe, g)
+
+    # local sorted-rank dispatch: [G*K] pairs -> per-expert capacity buffers
+    e_flat = top_idx.reshape(-1)
+    w_flat = top_vals.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(g), k)
+    onehot_fe = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot_fe, axis=0) - onehot_fe
+    my_rank = jnp.take_along_axis(rank, e_flat[:, None], axis=1)[:, 0]
+    valid = my_rank < cap
+    slot = jnp.where(valid, e_flat * cap + my_rank, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype)
+    buf = buf.at[slot].add(xf[tok_flat] * valid[:, None].astype(xf.dtype))
+    xin = buf[:-1].reshape(e, cap, d)
+
+    gate = jnp.einsum("ecd,edf->ecf", xin, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xin, params["w_up"])
+    yexp = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                      params["w_down"])
+
+    y_flat = yexp.reshape(e * cap, d)
+    picked = jnp.where(valid[:, None],
+                       y_flat[jnp.minimum(slot, e * cap - 1)], 0.0)
+    contrib = picked.astype(jnp.float32) * w_flat[:, None]
+    y = jax.ops.segment_sum(contrib, tok_flat, num_segments=g)
+
+    mask_ge = jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=1)
+    aux = {
+        "lb_fe": jnp.mean(mask_ge, axis=0) / k,          # [E]
+        "lb_pe": jnp.mean(probs, axis=0),                # [E]
+        "z_sq": jnp.mean(
+            jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+    }
+    return y, aux
+
+
+def _moe_core_einsum(params: Params, cfg: ModelConfig, xf: jax.Array):
+    """GShard one-hot dispatch (toy scale / ablation)."""
+    moe = cfg.moe
+    g, d = xf.shape
+    e, k = moe.num_experts, moe.top_k
+    logits, probs, top_vals, top_idx = _route(params, moe, xf)
+    cap = _capacity(moe, g)
+
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)       # [G,K,E]
+    mask_ge = jnp.sum(onehot, axis=1)
+    gates_ge = jnp.einsum("gk,gke->ge", top_vals, onehot)
+    rank = jnp.cumsum(mask_ge, axis=0) - mask_ge
+    keep = (rank < cap) * mask_ge
+    dispatch = jax.nn.one_hot(rank.astype(jnp.int32), cap,
+                              dtype=jnp.float32) * keep[..., None]
+    xin = jnp.einsum("gec,gd->ecd", dispatch,
+                     xf.astype(jnp.float32)).astype(xf.dtype)
+    gate = jnp.einsum("ecd,edf->ecf", xin, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xin, params["w_up"])
+    yexp = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                      params["w_down"])
+    combine = dispatch * gates_ge[..., None]
+    y = jnp.einsum("gec,ecd->gd", combine, yexp.astype(jnp.float32))
+    aux = {
+        "lb_fe": jnp.mean(mask_ge, axis=0) / k,
+        "lb_pe": jnp.mean(probs, axis=0),
+        "z_sq": jnp.mean(
+            jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+    }
+    return y, aux
+
+
+def _finalize_aux(moe: MoEConfig, aux) -> Dict[str, jax.Array]:
+    return {
+        "moe_load_balance": moe.num_experts * jnp.sum(
+            aux["lb_fe"] * aux["lb_pe"]),
+        "moe_router_z": aux["z_sq"],
+    }
+
+
+def apply_moe(
+    params: Params, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, T, d] -> (y, aux losses)."""
+    moe = cfg.moe
+    b, t, d = x.shape
+    core = _moe_core_einsum if moe.dispatch == "einsum" else _moe_core_local
+
+    ctx = shlib._active()
+    if ctx is None:
+        # single-device path (tests, CPU examples)
+        xf = x.reshape(-1, d)
+        y, aux = core(params, cfg, xf)
+        if moe.num_shared_experts > 0:
+            y = y + _shared_expert_out(params, xf).astype(jnp.float32)
+        return y.reshape(b, t, d).astype(x.dtype), _finalize_aux(moe, aux)
+
+    mesh, rules = ctx
+    dp = rules.get("batch")
+    ep = rules.get("ffn")  # expert ff dim rides the tensor-parallel axis
+    # tiny/odd batches (long_500k decodes with B=1) can't shard over the DP
+    # axes — fall back to replicated tokens, experts still ff-sharded.
+    if dp is not None:
+        dp_axes = dp if isinstance(dp, tuple) else (dp,)
+        dp_size = 1
+        for a in dp_axes:
+            dp_size *= mesh.shape[a]
+        if b % dp_size != 0:
+            dp = None
+
+    in_specs = (
+        {
+            "router": P(),
+            "w_gate": P(None, None, ep),
+            "w_up": P(None, None, ep),
+            "w_down": P(None, ep, None),
+            **({"shared_gate": P(None, ep),
+                "shared_up": P(None, ep),
+                "shared_down": P(ep, None)}
+               if moe.num_shared_experts > 0 else {}),
+        },
+        P(dp, None, None),
+    )
+    out_specs = (P(dp, None, None), {"lb_fe": P(), "lb_pe": P(), "z_sq": P()})
+
+    def local_fn(p, x_loc):
+        bl, tl, _ = x_loc.shape
+        xf = x_loc.reshape(-1, d)
+        y, aux = core(p, cfg, xf)
+        if moe.num_shared_experts > 0:
+            y = y + _shared_expert_out(p, xf).astype(jnp.float32)
+        if ep is not None:
+            y = jax.lax.psum(y, ep)          # complete the ff-shard partials
+        if dp is not None:
+            aux = jax.tree_util.tree_map(
+                lambda a: jax.lax.pmean(a, dp), aux)
+        return y.reshape(bl, tl, d).astype(x_loc.dtype), aux
+
+    moe_params = {k: params[k] for k in in_specs[0]}
+    y, aux = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(moe_params, x)
+    return y, _finalize_aux(moe, aux)

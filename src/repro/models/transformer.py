@@ -1,0 +1,429 @@
+"""Model assembly: block patterns, scanned layer stacks, losses, decode.
+
+Layer stack = ``first_k_dense`` unscanned leading blocks (DeepSeek style) +
+``num_scanned_groups`` repeats of ``block_pattern`` scanned with lax.scan
+(params stacked on a leading axis — small HLO, fast compiles, the standard
+MaxText trick). ``cfg.remat`` wraps the scan body in jax.checkpoint.
+
+Block kinds: "attn_mlp", "attn_moe", "mla_mlp", "mla_moe", "mamba_mlp",
+"mamba_moe", "mamba", "mlstm", "slstm".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    sinusoidal_positions,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+_MIXER_INIT = {
+    "attn": attn_mod.init_attention,
+    "mla": mla_mod.init_mla,
+    "mamba": mamba_mod.init_mamba,
+    "mlstm": xlstm_mod.init_mlstm,
+    "slstm": xlstm_mod.init_slstm,
+}
+_MIXER_FWD = {
+    "attn": attn_mod.attention_forward,
+    "mla": mla_mod.mla_forward,
+    "mamba": mamba_mod.mamba_forward,
+    "mlstm": xlstm_mod.mlstm_forward,
+    "slstm": xlstm_mod.slstm_forward,
+}
+_MIXER_DECODE = {
+    "attn": attn_mod.attention_decode,
+    "mla": mla_mod.mla_decode,
+    "mamba": mamba_mod.mamba_decode,
+    "mlstm": xlstm_mod.mlstm_decode,
+    "slstm": xlstm_mod.slstm_decode,
+}
+_MIXER_PREFILL = {
+    "attn": attn_mod.attention_prefill_cache,
+    "mla": mla_mod.mla_prefill_cache,
+    "mamba": mamba_mod.mamba_prefill_cache,
+    "mlstm": xlstm_mod.mlstm_prefill_cache,
+    "slstm": xlstm_mod.slstm_prefill_cache,
+}
+
+
+def _split_kind(kind: str) -> Tuple[str, Optional[str]]:
+    if "_" in kind:
+        mixer, ffn = kind.split("_", 1)
+        return mixer, ffn
+    return kind, None
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+def init_block(cfg: ModelConfig, kind: str, key: jax.Array, dtype) -> Params:
+    mixer, ffn = _split_kind(kind)
+    k1, k2 = jax.random.split(key)
+    params: Params = {
+        "norm1": init_norm(cfg, cfg.d_model, dtype),
+        mixer: _MIXER_INIT[mixer](cfg, k1, dtype),
+    }
+    if ffn is not None:
+        params["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+        if ffn == "moe":
+            params["moe"] = moe_mod.init_moe(cfg, k2, dtype)
+        else:
+            params["mlp"] = init_mlp(cfg, k2, cfg.d_ff, dtype)
+    return params
+
+
+def block_forward(
+    params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
+    positions: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    mixer, ffn = _split_kind(kind)
+    aux: Dict[str, jax.Array] = {}
+    h = apply_norm(params["norm1"], cfg, x)
+    x = x + _MIXER_FWD[mixer](params[mixer], cfg, h, positions)
+    x = constrain(x, ("batch", "act_seq", None))
+    if ffn is not None:
+        h = apply_norm(params["norm2"], cfg, x)
+        if ffn == "moe":
+            y, aux = moe_mod.apply_moe(params["moe"], cfg, h)
+        else:
+            y = apply_mlp(params["mlp"], cfg, h)
+        x = x + y
+        x = constrain(x, ("batch", "act_seq", None))
+    return x, aux
+
+
+def block_decode(
+    params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
+    cache: Params, positions: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    mixer, ffn = _split_kind(kind)
+    h = apply_norm(params["norm1"], cfg, x)
+    y, new_cache = _MIXER_DECODE[mixer](params[mixer], cfg, h, cache,
+                                        positions)
+    x = x + y
+    if ffn is not None:
+        h = apply_norm(params["norm2"], cfg, x)
+        if ffn == "moe":
+            y, _ = moe_mod.apply_moe(params["moe"], cfg, h)
+        else:
+            y = apply_mlp(params["mlp"], cfg, h)
+        x = x + y
+    return x, new_cache
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> Params:
+    mixer, _ = _split_kind(kind)
+    if mixer == "attn":
+        return attn_mod.init_attention_cache(cfg, batch, max_len, dtype)
+    if mixer == "mla":
+        return mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+    if mixer == "mamba":
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if mixer == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+def init_model(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Full parameter pytree. Scanned groups are vmapped-over-init."""
+    cfg.validate()
+    import numpy as np
+
+    from repro.common.dtypes import canonical_dtype
+
+    dtype = canonical_dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4 + cfg.first_k_dense)
+    params: Params = {"embed": init_embedding(cfg, keys[0], dtype)}
+
+    for i in range(cfg.first_k_dense):
+        kind = _dense_kind_for(cfg)
+        params[f"dense_{i}"] = init_block(cfg, kind, keys[2 + i], dtype)
+
+    g = cfg.num_scanned_groups
+
+    def init_group(k):
+        ks = jax.random.split(k, len(cfg.block_pattern))
+        return {
+            f"b{j}_{kind}": init_block(cfg, kind, ks[j], dtype)
+            for j, kind in enumerate(cfg.block_pattern)
+        }
+
+    group_keys = jax.random.split(keys[1], g)
+    params["groups"] = jax.vmap(init_group)(group_keys)
+    params["final_norm"] = init_norm(cfg, cfg.d_model, dtype)
+    return params
+
+
+def _dense_kind_for(cfg: ModelConfig) -> str:
+    """The block kind used for first_k_dense leading layers."""
+    mixer, _ = _split_kind(cfg.block_pattern[0])
+    return f"{mixer}_mlp" if mixer in ("attn", "mla") else "attn_mlp"
+
+
+def cast_params_to_compute(params: Params, cfg: ModelConfig) -> Params:
+    """Mixed precision: master weights stay fp32 in the optimizer; the
+    forward pass sees one bf16 copy (modules re-upcast where fp32 matters:
+    norms, router logits, SSM dynamics, RM feature products)."""
+    from repro.common.dtypes import canonical_dtype
+
+    cdtype = canonical_dtype(cfg.compute_dtype)
+    if cdtype == jnp.float32:
+        return params
+
+    def _cast(p):
+        if p.dtype == jnp.float32:
+            return p.astype(cdtype)
+        return p
+
+    return jax.tree_util.tree_map(_cast, params)
+
+
+def _prepare_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """tokens and/or precomputed embeds -> x [B, T, d], positions [B, T]."""
+    from repro.common.dtypes import canonical_dtype
+
+    cdtype = canonical_dtype(cfg.compute_dtype)
+    parts = []
+    if "embeds" in batch and batch["embeds"] is not None:
+        parts.append(batch["embeds"].astype(cdtype))  # modality frontend stub
+    if "tokens" in batch and batch["tokens"] is not None:
+        parts.append(embed_tokens(params["embed"], cfg, batch["tokens"], cdtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    b, t = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    return x, positions
+
+
+def forward(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward -> (logits [B,T,V] fp32, aux losses)."""
+    params = cast_params_to_compute(params, cfg)
+    x, positions = _prepare_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", "act_seq", None))
+    aux_total: Dict[str, jax.Array] = {}
+
+    for i in range(cfg.first_k_dense):
+        kind = _dense_kind_for(cfg)
+        x, aux = block_forward(params[f"dense_{i}"], cfg, kind, x, positions)
+        aux_total = _acc_aux(aux_total, aux)
+
+    def group_body(x, group_params):
+        aux_g: Dict[str, jax.Array] = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x, aux = block_forward(group_params[f"b{j}_{kind}"], cfg, kind, x,
+                                   positions)
+            aux_g = _acc_aux(aux_g, aux)
+        # scan carries must be fixed-structure: always emit both keys
+        out_aux = {
+            "moe_load_balance": aux_g.get("moe_load_balance", jnp.float32(0)),
+            "moe_router_z": aux_g.get("moe_router_z", jnp.float32(0)),
+        }
+        return x, out_aux
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, aux_stacked = jax.lax.scan(body, x, params["groups"],
+                                  unroll=cfg.scan_unroll)
+    for k, v in aux_stacked.items():
+        if cfg.moe is not None:
+            aux_total = _acc_aux(aux_total, {k: jnp.sum(v)})
+
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, aux_total
+
+
+def _acc_aux(a: Dict[str, jax.Array], b: Dict[str, jax.Array]):
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0.0) + v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def loss_fn(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+    z_loss_weight: float = 1e-4,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal-LM (or framewise, for encoders) cross entropy + aux losses.
+
+    ``batch["targets"]`` aligns with the LAST T_targets positions of the
+    model input (vlm prefixes are unsupervised). Ignore index: -1.
+    """
+    logits, aux = forward(params, cfg, batch)
+    targets = batch["targets"]
+    t_tgt = targets.shape[1]
+    logits = logits[:, -t_tgt:, :]
+
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (targets >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    z_loss = jnp.sum((lse**2) * mask) / denom * z_loss_weight
+
+    total = ce + z_loss
+    metrics = {"ce": ce, "z_loss": z_loss, "tokens": jnp.sum(mask)}
+    if cfg.moe is not None:
+        lb = aux.get("moe_load_balance", jnp.float32(0.0))
+        rz = aux.get("moe_router_z", jnp.float32(0.0))
+        total = total + cfg.moe.router_aux_weight * lb
+        total = total + cfg.moe.router_z_weight * rz
+        metrics["moe_load_balance"] = lb
+        metrics["moe_router_z"] = rz
+    metrics["loss"] = total
+    return total, metrics
+
+
+def block_prefill(
+    params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
+    positions: jax.Array, max_len: int,
+) -> Tuple[jax.Array, Params]:
+    """Like block_forward but also emits this block's decode cache."""
+    mixer, ffn = _split_kind(kind)
+    h = apply_norm(params["norm1"], cfg, x)
+    y, cache = _MIXER_PREFILL[mixer](params[mixer], cfg, h, positions, max_len)
+    x = x + y
+    if ffn is not None:
+        h = apply_norm(params["norm2"], cfg, x)
+        if ffn == "moe":
+            y, _ = moe_mod.apply_moe(params["moe"], cfg, h)
+        else:
+            y = apply_mlp(params["mlp"], cfg, h)
+        x = x + y
+    return x, cache
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, batch: Dict[str, Any], max_len: int
+) -> Tuple[jax.Array, Params]:
+    """Consume a prompt; return (logits [B,T,V], decode cache).
+
+    The serving engine calls this once per request batch, then switches to
+    ``decode_step``.
+    """
+    params = cast_params_to_compute(params, cfg)
+    x, positions = _prepare_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", "act_seq", None))
+    cache: Params = {}
+    for i in range(cfg.first_k_dense):
+        kind = _dense_kind_for(cfg)
+        x, cache[f"dense_{i}"] = block_prefill(
+            params[f"dense_{i}"], cfg, kind, x, positions, max_len)
+
+    def group_body(x, group_params):
+        caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            name = f"b{j}_{kind}"
+            x, caches[name] = block_prefill(group_params[name], cfg, kind, x,
+                                            positions, max_len)
+        return x, caches
+
+    x, cache["groups"] = jax.lax.scan(group_body, x, params["groups"],
+                                      unroll=cfg.scan_unroll)
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Cache pytree mirroring the layer stack (scanned groups stacked)."""
+    from repro.common.dtypes import canonical_dtype
+
+    if not cfg.causal:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    dtype = canonical_dtype(cfg.compute_dtype)
+    cache: Params = {}
+    for i in range(cfg.first_k_dense):
+        kind = _dense_kind_for(cfg)
+        cache[f"dense_{i}"] = init_block_cache(cfg, kind, batch, max_len, dtype)
+
+    def one_group(_):
+        return {
+            f"b{j}_{kind}": init_block_cache(cfg, kind, batch, max_len, dtype)
+            for j, kind in enumerate(cfg.block_pattern)
+        }
+
+    g = cfg.num_scanned_groups
+    cache["groups"] = jax.vmap(one_group)(jnp.arange(g))
+    return cache
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Params,
+    tokens: jax.Array,      # [B, 1] int32
+    positions: jax.Array,   # [B]    int32 position of this token
+) -> Tuple[jax.Array, Params]:
+    """One autoregressive step -> (logits [B, 1, V], updated cache)."""
+    from repro.common.dtypes import canonical_dtype
+
+    params = cast_params_to_compute(params, cfg)
+    cdtype = canonical_dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], cfg, tokens, cdtype)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_positions(positions[:, None], cfg.d_model).astype(
+            x.dtype)
+
+    new_cache: Params = {}
+    for i in range(cfg.first_k_dense):
+        kind = _dense_kind_for(cfg)
+        x, new_cache[f"dense_{i}"] = block_decode(
+            params[f"dense_{i}"], cfg, kind, x, cache[f"dense_{i}"], positions
+        )
+
+    def group_body(x, scanned):
+        group_params, group_cache = scanned
+        new_gc = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            name = f"b{j}_{kind}"
+            x, new_gc[name] = block_decode(
+                group_params[name], cfg, kind, x, group_cache[name], positions
+            )
+        return x, new_gc
+
+    x, new_cache["groups"] = jax.lax.scan(
+        group_body, x, (params["groups"], cache["groups"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,374 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel form) and sLSTM (scalar
+memory, strictly sequential scan with memory mixing).
+
+The mLSTM's exp-gated outer-product state is a *gated* cousin of the RM
+linear-attention state (both keep sum_s w_s k_s v_s^T); the connection is
+noted in DESIGN.md §6 — but xlstm is attention-free, so the paper's RM
+technique is not applied here (assignment's arch-applicability rule).
+
+Training uses the stabilized quadratic masked form for mLSTM (O(T^2), like
+exact attention) and a lax.scan for sLSTM. Decode for both is O(1)/token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import normal_init
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    pf = cfg.xlstm.proj_factor
+    d_up = int(pf * d)
+    dh = d_up // h
+    ks = jax.random.split(key, 8)
+    std = cfg.init_std
+    return {
+        "w_up": normal_init(ks[0], (d, 2 * d_up), std, dtype),
+        "conv_w": normal_init(ks[1], (cfg.xlstm.conv_kernel, d_up), std, dtype),
+        "conv_b": jnp.zeros((d_up,), dtype),
+        "wq": normal_init(ks[2], (d_up, d_up), std, dtype),
+        "wk": normal_init(ks[3], (d_up, d_up), std, dtype),
+        "wv": normal_init(ks[4], (d_up, d_up), std, dtype),
+        "w_if": normal_init(ks[5], (d_up, 2 * h), std, dtype),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), jnp.full((h,), 3.0)]
+        ).astype(dtype),  # forget-gate bias init high
+        "gn_scale": jnp.ones((d_up,), dtype),
+        "w_down": normal_init(ks[6], (d_up, d), std, dtype),
+    }
+
+
+def _mlstm_qkv_gates(params: Params, cfg: ModelConfig, xu: jax.Array,
+                     conv_state=None):
+    """xu: [B, T, d_up] -> q, k, v [B,T,H,dh]; i, f logits [B,T,H]."""
+    h = cfg.num_heads
+    kk = cfg.xlstm.conv_kernel
+    if conv_state is None:
+        pad = jnp.zeros((xu.shape[0], kk - 1, xu.shape[2]), xu.dtype)
+    else:
+        pad = conv_state.astype(xu.dtype)
+    xp = jnp.concatenate([pad, xu], axis=1)
+    xc = sum(
+        xp[:, i : i + xu.shape[1]] * params["conv_w"][i].astype(xu.dtype)
+        for i in range(kk)
+    ) + params["conv_b"].astype(xu.dtype)
+    xc = jax.nn.silu(xc)
+    b, t, d_up = xu.shape
+    dh = d_up // h
+    q = (xc @ params["wq"]).reshape(b, t, h, dh)
+    k = (xc @ params["wk"]).reshape(b, t, h, dh) / math.sqrt(dh)
+    v = (xu @ params["wv"]).reshape(b, t, h, dh)
+    gates = (xc @ params["w_if"] + params["b_if"].astype(xu.dtype)).astype(
+        jnp.float32
+    )
+    i_log, f_log = gates[..., :h], gates[..., h:]
+    new_conv = xp[:, -(kk - 1):]
+    return q, k, v, i_log, f_log, new_conv
+
+
+def _mlstm_cell_chunked(cfg: ModelConfig, q, k, v, i_log, f_log):
+    """Stabilized chunkwise-parallel mLSTM.
+
+    Sequence is cut into ``cfg.xlstm.chunk`` slices; within a chunk the
+    (t, s) weight matrix is quadratic (bounded [C, C]); across chunks the
+    matrix memory (C_state, n_state, m_state) recurs through a lax.scan —
+    peak memory O(T*C) instead of O(T^2).
+
+    Stabilization: every weight exp(.) is computed relative to a per-step
+    max ``m_t = max(intra-chunk max, b_t + m_state)`` exactly like the
+    sequential recurrence, so the chunked form is bit-comparable to
+    ``mlstm_decode`` rolled T times (tested).
+    """
+    b, t, h, dh = q.shape
+    chunk = min(cfg.xlstm.chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_log = jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    n_ch = tp // chunk
+
+    def to_chunks(x_, extra=()):
+        return x_.reshape(b, n_ch, chunk, *x_.shape[2:]).swapaxes(0, 1)
+
+    q_c, k_c, v_c = to_chunks(q), to_chunks(k), to_chunks(v)
+    i_c, f_c = to_chunks(i_log), to_chunks(f_log)
+
+    def chunk_step(carry, inp):
+        c_state, n_state, m_state = carry        # [B,H,dh,dh],[B,H,dh],[B,H]
+        qq, kk, vv, ii, ff = inp                 # [B,C,H,*]
+        logf = jax.nn.log_sigmoid(ff.astype(jnp.float32))   # [B,C,H]
+        bcum = jnp.cumsum(logf, axis=1)                     # inclusive
+        btot = bcum[:, -1]                                  # [B,H]
+        ii = ii.astype(jnp.float32)
+
+        # per-step stabilizer: intra max over s<=t of (b_t - b_s + i_s),
+        # inter term b_t + m_state
+        lw_intra = (bcum[:, :, None, :] - bcum[:, None, :, :]
+                    + ii[:, None, :, :])                    # [B,Ct,Cs,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))[None, :, :,
+                                                              None]
+        lw_intra = jnp.where(mask, lw_intra, -1e30)
+        m_intra = jnp.max(lw_intra, axis=2)                 # [B,Ct,H]
+        m_inter = bcum + m_state[:, None, :]                # [B,Ct,H]
+        m_t = jnp.maximum(m_intra, m_inter)
+
+        w_intra = jnp.exp(lw_intra - m_t[:, :, None, :])    # [B,Ct,Cs,H]
+        scores = jnp.einsum("bqhd,bshd->bqsh", qq.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * w_intra
+        num = jnp.einsum("bqsh,bshd->bqhd", scores, vv.astype(jnp.float32))
+        den = jnp.sum(scores, axis=2)                       # [B,Ct,H]
+
+        w_inter = jnp.exp(m_inter - m_t)                    # [B,Ct,H]
+        q_eff = qq.astype(jnp.float32) * w_inter[..., None]
+        num += jnp.einsum("bqhd,bhdv->bqhv", q_eff, c_state)
+        den += jnp.einsum("bqhd,bhd->bqh", q_eff, n_state)
+
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        out = num / den[..., None]                          # [B,Ct,H,dh]
+
+        # state update to end of chunk
+        m_new = jnp.maximum(m_state + btot,
+                            jnp.max(btot[:, None] - bcum + ii, axis=1))
+        w_st = jnp.exp(btot[:, None] - bcum + ii - m_new[:, None])  # [B,C,H]
+        c_new = (jnp.exp(m_state + btot - m_new)[..., None, None] * c_state
+                 + jnp.einsum("bsh,bshd,bshv->bhdv", w_st,
+                              kk.astype(jnp.float32),
+                              vv.astype(jnp.float32)))
+        n_new = (jnp.exp(m_state + btot - m_new)[..., None] * n_state
+                 + jnp.einsum("bsh,bshd->bhd", w_st, kk.astype(jnp.float32)))
+        return (c_new, n_new, m_new), out
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    (_, _, _), outs = jax.lax.scan(chunk_step, (c0, n0, m0),
+                                   (q_c, k_c, v_c, i_c, f_c))
+    out = outs.swapaxes(0, 1).reshape(b, tp, h, dh)[:, :t]
+    return out
+
+
+def mlstm_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions=None) -> jax.Array:
+    """Chunkwise-parallel stabilized mLSTM. x: [B, T, d]."""
+    b, t, d = x.shape
+    up = x @ params["w_up"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_log, f_log, _ = _mlstm_qkv_gates(params, cfg, xu)
+    out = _mlstm_cell_chunked(cfg, q, k, v, i_log, f_log)
+    out = out.reshape(b, t, -1)
+    out = _group_norm(out, params["gn_scale"], cfg.num_heads, cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32))
+    return out.astype(x.dtype) @ params["w_down"]
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, groups: int, eps: float):
+    """Per-head group norm over the feature dim. x: [..., d_up] fp32."""
+    shape = x.shape
+    xg = x.reshape(*shape[:-1], groups, shape[-1] // groups)
+    mean = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(shape) * scale.astype(x.dtype)
+
+
+def mlstm_prefill_cache(params: Params, cfg: ModelConfig, x: jax.Array,
+                        positions, max_len: int):
+    """Forward + closed-form final (C, n, m) state for decode handoff.
+
+    m_T = max_s (i_s + F_T - F_s) with F the cumulative log-forget sums;
+    C_T = sum_s exp(i_s + F_T - F_s - m_T) k_s v_s^T (and n likewise).
+    """
+    b, t, d = x.shape
+    y = mlstm_forward(params, cfg, x, positions)
+    up = x @ params["w_up"]
+    xu, _ = jnp.split(up, 2, axis=-1)
+    q, k, v, i_log, f_log, conv_state = _mlstm_qkv_gates(params, cfg, xu)
+    logf = jax.nn.log_sigmoid(f_log)
+    f_cum = jnp.cumsum(logf, axis=1)                 # [B,T,H]
+    f_total = f_cum[:, -1:]
+    lw = i_log + f_total - f_cum                     # [B,T,H]
+    m = jnp.max(lw, axis=1)                          # [B,H]
+    w = jnp.exp(lw - m[:, None, :])                  # [B,T,H]
+    c_state = jnp.einsum("bth,bthd,bthv->bhdv", w, k.astype(jnp.float32),
+                         v.astype(jnp.float32))
+    n_state = jnp.einsum("bth,bthd->bhd", w, k.astype(jnp.float32))
+    return y, {"conv": conv_state, "c": c_state, "n": n_state, "m": m}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    h = cfg.num_heads
+    d_up = int(cfg.xlstm.proj_factor * cfg.d_model)
+    dh = d_up // h
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_kernel - 1, d_up), dtype),
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params: Params, cfg: ModelConfig, x: jax.Array, cache,
+                 positions=None):
+    b = x.shape[0]
+    up = x @ params["w_up"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_log, f_log, conv_state = _mlstm_qkv_gates(
+        params, cfg, xu, conv_state=cache["conv"]
+    )
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]              # [B,H,dh]
+    i_log, f_log = i_log[:, 0], f_log[:, 0]          # [B,H]
+    logf = jax.nn.log_sigmoid(f_log)
+    m_new = jnp.maximum(logf + cache["m"], i_log)
+    f_eff = jnp.exp(logf + cache["m"] - m_new)
+    i_eff = jnp.exp(i_log - m_new)
+    c_new = (
+        f_eff[..., None, None] * cache["c"]
+        + i_eff[..., None, None] * (k[..., :, None] * v[..., None, :])
+    )
+    n_new = f_eff[..., None] * cache["n"] + i_eff[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    out = (num / den[..., None]).reshape(b, 1, -1)
+    out = _group_norm(out, params["gn_scale"], cfg.num_heads, cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32))
+    y = out.astype(x.dtype) @ params["w_down"]
+    return y, {"conv": conv_state, "c": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    std = cfg.init_std
+    d_ff = int(cfg.xlstm.slstm_ff_factor * d)
+    return {
+        # input weights for (z, i, f, o)
+        "w_in": normal_init(ks[0], (d, 4 * d), std, dtype),
+        "b_in": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(dtype),
+        # block-diagonal recurrent mixing: per head [dh, dh] for each gate
+        "r_rec": normal_init(ks[1], (4, h, dh, dh), std / math.sqrt(dh),
+                             jnp.float32),
+        "gn_scale": jnp.ones((d,), dtype),
+        "ff_up": normal_init(ks[2], (d, d_ff), std, dtype),
+        "ff_down": normal_init(ks[3], (d_ff, d), std, dtype),
+    }
+
+
+def _slstm_cell(params: Params, cfg: ModelConfig, wx: jax.Array, state):
+    """wx: [B, 4, H, dh] precomputed input contribution; one time step."""
+    h_prev, c_prev, n_prev, m_prev = state                 # [B,H,dh] x3, [B,H,dh]
+    hh = cfg.num_heads
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, params["r_rec"])
+    pre = wx.astype(jnp.float32) + rec                     # [B,4,H,dh]
+    z_t = jnp.tanh(pre[:, 0])
+    i_log = pre[:, 1]
+    f_log = jax.nn.log_sigmoid(pre[:, 2])
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(f_log + m_prev, i_log)
+    i_eff = jnp.exp(i_log - m_new)
+    f_eff = jnp.exp(f_log + m_prev - m_new)
+    c_new = f_eff * c_prev + i_eff * z_t
+    n_new = f_eff * n_prev + i_eff
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions=None) -> jax.Array:
+    b, t, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = (x @ params["w_in"] + params["b_in"].astype(x.dtype)).reshape(
+        b, t, 4, h, dh
+    )
+
+    def step(state, wx_t):
+        h_new, c, n, m = _slstm_cell(params, cfg, wx_t, state)
+        return (h_new, c, n, m), h_new
+
+    zeros = jnp.zeros((b, h, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((b, h, dh), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(b, t, d)
+    out = _group_norm(out, params["gn_scale"], h, cfg.norm_eps)
+    y = out.astype(x.dtype)
+    # post-cell feed-forward (xLSTM block's ff, gelu)
+    return jax.nn.gelu(y @ params["ff_up"]) @ params["ff_down"]
+
+
+def slstm_prefill_cache(params: Params, cfg: ModelConfig, x: jax.Array,
+                        positions, max_len: int):
+    """Forward + final recurrent state (the scan's carry)."""
+    b, t, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = (x @ params["w_in"] + params["b_in"].astype(x.dtype)).reshape(
+        b, t, 4, h, dh
+    )
+
+    def step(state, wx_t):
+        h_new, c, n, m = _slstm_cell(params, cfg, wx_t, state)
+        return (h_new, c, n, m), h_new
+
+    zeros = jnp.zeros((b, h, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((b, h, dh), -1e30, jnp.float32))
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, state0,
+                                            jnp.moveaxis(wx, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(b, t, d)
+    out = _group_norm(out, params["gn_scale"], h, cfg.norm_eps)
+    y = out.astype(x.dtype)
+    y = jax.nn.gelu(y @ params["ff_up"]) @ params["ff_down"]
+    return y, {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    zeros = jnp.zeros((batch, h, dh), jnp.float32)
+    return {
+        "h": zeros,
+        "c": zeros,
+        "n": zeros,
+        "m": jnp.full((batch, h, dh), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(params: Params, cfg: ModelConfig, x: jax.Array, cache,
+                 positions=None):
+    b, _, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = (x @ params["w_in"] + params["b_in"].astype(x.dtype)).reshape(
+        b, 4, h, dh
+    )
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h_new, c, n, m = _slstm_cell(params, cfg, wx, state)
+    out = h_new.reshape(b, 1, d)
+    out = _group_norm(out, params["gn_scale"], h, cfg.norm_eps)
+    y = out.astype(x.dtype)
+    y = jax.nn.gelu(y @ params["ff_up"]) @ params["ff_down"]
+    return y, {"h": h_new, "c": c, "n": n, "m": m}

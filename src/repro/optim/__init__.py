@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine, warmup_linear
+from repro.optim.compression import (
+    quantize_int8,
+    dequantize_int8,
+    compressed_psum_with_feedback,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "warmup_linear",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum_with_feedback",
+]

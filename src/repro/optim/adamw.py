@@ -1,0 +1,108 @@
+"""AdamW from scratch (no optax): decoupled weight decay, global-norm grad
+clipping, non-trainable masking (RM plan omegas are frozen constants).
+
+Optimizer state lives in the same sharding as the parameters (FSDP-friendly:
+mu/nu inherit each param's PartitionSpec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_map_with_path
+
+# parameter names that must never be updated (static draws of the paper's
+# feature maps are part of the model DEFINITION, not learnable weights)
+FROZEN_LEAF_NAMES = ("rm_omegas",)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    # 1D params (norm scales, biases) skip weight decay, standard practice
+    decay_min_ndim: int = 2
+
+
+def _is_frozen(path: Tuple[str, ...]) -> bool:
+    return path[-1] in FROZEN_LEAF_NAMES
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def mask_frozen(grads: Any) -> Any:
+    """Zero gradients of non-trainable leaves."""
+    return tree_map_with_path(
+        lambda path, g: jnp.zeros_like(g) if _is_frozen(path) else g, grads
+    )
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    opt_state: Dict[str, Any],
+    lr: jax.Array,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    grads = mask_frozen(grads)
+    grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    step = opt_state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1.0 - b1) * g.astype(m.dtype),
+        opt_state["mu"], grads,
+    )
+    new_nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g.astype(v.dtype)),
+        opt_state["nu"], grads,
+    )
+
+    def leaf_update(path, p):
+        g_m = _get(new_mu, path)
+        g_v = _get(new_nu, path)
+        if _is_frozen(path):
+            return p
+        update = (g_m / bc1) / (jnp.sqrt(g_v / bc2) + cfg.eps)
+        if p.ndim >= cfg.decay_min_ndim:
+            update = update + cfg.weight_decay * p.astype(update.dtype)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = tree_map_with_path(leaf_update, params)
+    metrics = {"grad_norm": grad_norm, "lr": lr}
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, metrics
+
+
+def _get(tree, path):
+    node = tree
+    for k in path:
+        node = node[k]
+    return node

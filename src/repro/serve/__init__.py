@@ -1,0 +1,4 @@
+from repro.serve.engine import ServingEngine, Request, RequestState
+from repro.serve.sampler import sample_token
+
+__all__ = ["ServingEngine", "Request", "RequestState", "sample_token"]

@@ -1,0 +1,195 @@
+"""Batched serving engine with continuous batching over fixed decode slots.
+
+Design (vLLM-style, adapted to jax's static shapes):
+
+  * the engine owns ``num_slots`` decode lanes; the decode step is ONE jitted
+    call over all lanes every iteration (token + per-lane position);
+  * finished/empty lanes decode into a scratch position of their cache
+    (position pinned, output discarded) — no recompilation as requests churn;
+  * admission: queued requests are prefills; each prefill runs (jitted,
+    bucketed to power-of-two lengths to bound compile count) and its cache is
+    spliced into the lane's slice of the batched cache;
+  * RM/SSM archs have O(1)-size lane state, so splicing is a constant-cost
+    scatter — the paper's technique removes the per-token KV growth entirely
+    (DESIGN.md §2).
+
+This engine is CPU-runnable (examples/serve_lm.py) and mesh-compatible: all
+state updates are pure jax ops on pytrees that can carry shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    decode_step,
+    init_decode_cache,
+    prefill,
+)
+from repro.serve.sampler import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                  # [T] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    slot: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    position: int = 0                   # next position to decode
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 2047) // 2048) * 2048
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        num_slots: int = 4,
+        max_len: int = 1024,
+        rng_seed: int = 0,
+    ):
+        if not cfg.causal:
+            raise ValueError("encoder-only models cannot be served "
+                             "autoregressively")
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = init_decode_cache(cfg, num_slots, max_len)
+        self.slots: List[Optional[RequestState]] = [None] * num_slots
+        self.queue: List[Request] = []
+        self.finished: Dict[int, RequestState] = {}
+        self._key = jax.random.PRNGKey(rng_seed)
+        self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
+        self._positions = jnp.zeros((num_slots,), jnp.int32)
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
+        )
+        self._prefill_cache: Dict[int, Callable] = {}
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def run(self, max_iters: int = 10_000) -> Dict[int, RequestState]:
+        it = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and it < max_iters:
+            self._admit()
+            self._decode_iteration()
+            it += 1
+        return self.finished
+
+    # -- internals --------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, tokens):
+                batch = {"tokens": tokens}
+                return prefill(params, cfg, batch, self.max_len)
+
+            self._prefill_cache[length] = jax.jit(fn)
+        return self._prefill_cache[length]
+
+    def _admit(self) -> None:
+        free = self._free_slots()
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            t = len(req.prompt)
+            # one compile per distinct prompt length; production would
+            # right-pad to _bucket(t) with masked positions — kept exact
+            # here for clarity.
+            tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+            logits, cache1 = self._prefill_fn(t)(self.params, tokens)
+            self._splice_cache(slot, cache1)
+            state = RequestState(request=req, slot=slot, position=t,
+                                 t_enqueue=time.time())
+            # first generated token from the last prefill logit
+            self._key, sub = jax.random.split(self._key)
+            tok = sample_token(logits[:, -1], sub, req.temperature)
+            state.generated.append(int(tok[0]))
+            state.t_first_token = time.time()
+            self._tokens = self._tokens.at[slot, 0].set(tok[0])
+            self._positions = self._positions.at[slot].set(t)
+            self.slots[slot] = state
+        # park empty lanes on a scratch position
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self._positions = self._positions.at[i].set(self.max_len - 1)
+
+    def _splice_cache(self, slot: int, cache1: Any) -> None:
+        """Write a request's (batch=1) cache into lane ``slot``."""
+
+        # structural walk (dict trees with matching structure)
+        def _walk(big, small, path):
+            if isinstance(big, dict):
+                return {k: _walk(big[k], small[k], path + (k,))
+                        for k in big}
+            axis = 1 if "groups" in path else 0
+            return jax.lax.dynamic_update_index_in_dim(
+                big, jnp.take(small, 0, axis=axis).astype(big.dtype), slot,
+                axis=axis,
+            )
+
+        self.cache = _walk(self.cache, cache1, ())
+
+    def _decode_iteration(self) -> None:
+        active = [s for s in self.slots if s is not None]
+        if not active:
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, self._tokens, self._positions
+        )
+        self._key, sub = jax.random.split(self._key)
+        # per-slot temperature: sample both and select (cheap at CPU scale)
+        greedy = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        sampled = sample_token(logits[:, 0], sub, temperature=1.0)
+        for state in list(active):
+            i = state.slot
+            req = state.request
+            tok = int(sampled[i] if req.temperature > 0 else greedy[i])
+            state.generated.append(tok)
+            state.position += 1
+            self._tokens = self._tokens.at[i, 0].set(tok)
+            self._positions = self._positions.at[i].set(state.position)
+            hit_eos = req.eos_token is not None and tok == req.eos_token
+            if (len(state.generated) >= req.max_new_tokens or hit_eos
+                    or state.position >= self.max_len - 1):
+                state.done = True
+                state.t_done = time.time()
+                self.finished[req.request_id] = state
+                self.slots[i] = None
+
+
+def _stacked(x) -> bool:
+    return x.ndim >= 2

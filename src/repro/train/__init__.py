@@ -1,0 +1,19 @@
+from repro.train.steps import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    make_eval_step,
+    make_prefill_step,
+    make_decode_step,
+)
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_eval_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "CheckpointManager",
+]

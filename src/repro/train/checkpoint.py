@@ -1,0 +1,127 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-last-k, resharding
+restore for elastic reconfiguration.
+
+Format: one ``.npz`` per checkpoint (flattened param paths -> arrays) plus a
+``meta.json``. Writes go to ``<dir>/tmp.<step>`` then ``os.replace`` into
+place — a crash mid-save can never corrupt the latest checkpoint (restart
+safety). ``restore(..., shardings=...)`` device_puts each leaf with the
+CURRENT mesh's sharding, so a run restarted on a different topology (elastic
+downscale after node failure, upscale after repair) reshards transparently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.common.tree import flatten_dict, unflatten_dict
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def available_steps(self) -> List[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and (p / "state.npz").exists():
+                steps.append(int(p.name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, state: Any, extra_meta: Optional[Dict] = None):
+        flat = flatten_dict(_to_host(state))
+        tmp = self.dir / f"tmp.{step}.{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "state.npz", **{k: np.asarray(v)
+                                       for k, v in flat.items()})
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "leaves": {k: [list(np.shape(v)), str(np.asarray(v).dtype)]
+                       for k, v in flat.items()},
+        }
+        if extra_meta:
+            meta.update(extra_meta)
+        (tmp / "meta.json").write_text(json.dumps(meta, indent=2))
+        final = self._step_dir(step)
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)             # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.available_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, shardings: Any = None,
+                template: Any = None) -> Dict[str, Any]:
+        """Load a checkpoint; optionally reshard onto the current mesh.
+
+        ``shardings``: pytree of NamedSharding matching the state —
+        device_put reshards each leaf (elastic restarts). ``template``:
+        optional pytree to validate structure against.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self._step_dir(step)
+        with np.load(path / "state.npz") as data:
+            flat = {k: data[k] for k in data.files}
+        state = unflatten_dict(flat)
+        state = _fix_scalars(state)
+        if template is not None:
+            t_flat = set(flatten_dict(template).keys())
+            s_flat = set(flat.keys())
+            if t_flat != s_flat:
+                missing = t_flat - s_flat
+                extra = s_flat - t_flat
+                raise ValueError(
+                    f"checkpoint structure mismatch: missing={sorted(missing)[:5]} "
+                    f"extra={sorted(extra)[:5]}"
+                )
+        if shardings is not None:
+            from repro.common.tree import EMPTY_SENTINEL
+
+            flat_state = flatten_dict(state)
+            flat_shard = flatten_dict(shardings)
+            state = unflatten_dict({
+                k: (v if k.endswith(EMPTY_SENTINEL)
+                    else jax.device_put(v, flat_shard[k]))
+                for k, v in flat_state.items()
+            })
+        return state
+
+
+def _to_host(tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+
+def _fix_scalars(tree: Any) -> Any:
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x) if np.ndim(x) == 0 else x, tree
+    )

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train-grad step + (for causal archs) one decode step on CPU; asserts
+output shapes and absence of NaNs. The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_model,
+    loss_fn,
+)
+
+ARCHS = list_archs()
+
+
+def _smoke_batch(cfg, key, batch=2, seq=32):
+    kt, ke = jax.random.split(key)
+    if cfg.frontend == "audio_stub":
+        return {
+            "embeds": jax.random.normal(ke, (batch, seq, cfg.d_model),
+                                        jnp.bfloat16),
+            "targets": jax.random.randint(kt, (batch, seq), 0,
+                                          cfg.vocab_size),
+        }
+    if cfg.frontend == "vision_stub":
+        p = 8
+        return {
+            "embeds": jax.random.normal(ke, (batch, p, cfg.d_model),
+                                        jnp.bfloat16) * 0.02,
+            "tokens": jax.random.randint(kt, (batch, seq - p), 0,
+                                         cfg.vocab_size),
+            "targets": jax.random.randint(kt, (batch, seq - p), 0,
+                                          cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        "targets": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    logits, _ = forward(params, cfg, batch)
+    total_t = batch["targets"].shape[1] if cfg.frontend != "vision_stub" \
+        else batch["tokens"].shape[1] + 8
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+    assert logits.shape[1] == total_t
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    loss, metrics = loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+
+    grads = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    assert all(not bool(jnp.isnan(g).any()) for g in gleaves), (
+        f"{arch}: NaN grads"
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    if not cfg.causal:
+        with pytest.raises(ValueError, match="encoder-only"):
+            init_decode_cache(cfg, 2, 16)
+        return
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    cache = init_decode_cache(cfg, batch=2, max_len=16)
+    tokens = jnp.zeros((2, 1), jnp.int32)
+    for step in range(3):
+        pos = jnp.full((2,), step, jnp.int32)
+        logits, cache = decode_step(params, cfg, cache, tokens, pos)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN decode"
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-v2-lite-16b"])
+def test_smoke_rm_mode(arch):
+    """The paper's RM attention mode runs on attention archs."""
+    cfg = get_config(arch, smoke=True, attention_mode="rm")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    logits, _ = forward(params, cfg, batch)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_rm_mode_rejected_for_attention_free():
+    with pytest.raises(ValueError, match="attention-free"):
+        get_config("xlstm-350m", smoke=True, attention_mode="rm")
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the published numbers we were assigned."""
+    c = get_config("qwen3-1.7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (28, 2048, 16, 8, 6144, 151936)
+    assert c.qk_norm
+    c = get_config("mixtral-8x7b")
+    assert (c.num_layers, c.d_model, c.moe.num_experts, c.moe.top_k) == \
+        (32, 4096, 8, 2)
+    assert c.sliding_window > 0
+    c = get_config("deepseek-v2-lite-16b")
+    assert c.mla.kv_lora_rank == 512 and c.moe.num_experts == 64
+    assert c.moe.top_k == 6 and c.moe.num_shared_experts == 2
+    c = get_config("jamba-v0.1-52b")
+    kinds = [b.split("_")[0] for b in c.block_pattern]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    assert sum("moe" in b for b in c.block_pattern) == 4  # every other layer
+    c = get_config("hubert-xlarge")
+    assert not c.causal and c.vocab_size == 504 and c.num_layers == 48
+    c = get_config("xlstm-350m")
+    assert set(b.split("_")[0] for b in c.block_pattern) == {"mlstm", "slstm"}
+    c = get_config("olmo-1b")
+    assert c.norm_kind == "nonparametric_ln"
+    c = get_config("qwen2-7b")
+    assert c.qkv_bias and c.d_ff == 18944 and c.num_kv_heads == 4
+    c = get_config("internvl2-1b")
+    assert c.frontend == "vision_stub" and c.d_model == 896
+    c = get_config("h2o-danube-3-4b")
+    assert c.sliding_window > 0 and c.d_model == 3840

@@ -1,0 +1,129 @@
+"""Tests for Algorithm 2 (compositional kernels) and the linear models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    PolynomialKernel,
+    RFFInnerMap,
+    RademacherInnerMap,
+    make_compositional_feature_map,
+    make_feature_map,
+    train_kernel_ridge,
+    train_kernel_svm,
+    train_linear,
+)
+
+
+def _unit_ball(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / (jnp.linalg.norm(x, axis=1, keepdims=True) * 1.05)
+
+
+def test_compositional_with_dot_inner_recovers_algorithm1():
+    """K_dp composed with the plain dot product == the dot product kernel."""
+    kern = PolynomialKernel(4, 1.0)
+    key = jax.random.PRNGKey(0)
+    X = _unit_ball(key, 24, 8)
+    exact = np.asarray(kern.gram(X))
+
+    cfm = make_compositional_feature_map(
+        kern,
+        lambda k, num: RademacherInnerMap.create(k, num, 8),
+        input_dim=8,
+        num_features=4096,
+        key=key,
+        measure="proportional",
+        inner_bound=1.0,
+    )
+    approx = np.asarray(cfm.estimate_gram(X))
+    # relative to the kernel's scale ((1+<x,y>)^4 reaches ~13 here)
+    assert np.mean(np.abs(approx - exact)) / np.abs(exact).max() < 0.02
+
+
+def test_compositional_exp_of_rbf():
+    """K_co = exp(K_rbf(x,y)) via RFF inner maps (paper §5's genuinely new
+    kernel class)."""
+    dp = ExponentialDotProductKernel(1.0)
+    key = jax.random.PRNGKey(1)
+    X = _unit_ball(key, 24, 6)
+    inner = RFFInnerMap.create(key, 1, 6, sigma=1.0)
+    k_in = np.asarray(inner.exact_kernel(X, X))
+    exact = np.exp(k_in)  # f = exp, sigma2 = 1
+
+    cfm = make_compositional_feature_map(
+        dp,
+        lambda k, num: RFFInnerMap.create(k, num, 6, sigma=1.0),
+        input_dim=6,
+        num_features=8192,
+        key=jax.random.PRNGKey(2),
+        measure="proportional",
+        inner_bound=2.0,  # C_W for RFF: |W| <= sqrt(2)
+    )
+    approx = np.asarray(cfm.estimate_gram(X))
+    # exact values live in [1, e]; inner-map noise compounds with degree so
+    # the tolerance is looser than for Algorithm 1.
+    assert np.mean(np.abs(approx - exact)) < 0.25
+
+
+def test_compositional_output_dim_and_pytree():
+    dp = PolynomialKernel(3, 1.0)
+    cfm = make_compositional_feature_map(
+        dp, lambda k, num: RademacherInnerMap.create(k, num, 4),
+        input_dim=4, num_features=64, key=jax.random.PRNGKey(0),
+    )
+    x = jnp.ones((5, 4)) * 0.3
+    z = cfm(x)
+    assert z.shape == (5, cfm.output_dim)
+    leaves, treedef = jax.tree_util.tree_flatten(cfm)
+    cfm2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_allclose(np.asarray(cfm2(x)), np.asarray(z))
+
+
+# ---------------------------------------------------------------------------
+# Linear / kernel classifiers (the Table-1 machinery)
+# ---------------------------------------------------------------------------
+def _toy_classification(key, n=400, d=10, margin=0.3):
+    kx, kw, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d))
+    X = X / (jnp.linalg.norm(X, axis=1, keepdims=True) * 1.05)
+    w = jax.random.normal(kw, (d,))
+    y = jnp.sign(X @ w + margin * jax.random.normal(kn, (n,)) * 0.1)
+    y = jnp.where(y == 0, 1.0, y)
+    return X, y
+
+
+@pytest.mark.parametrize("loss", ["logistic", "squared_hinge"])
+def test_train_linear_separable(loss):
+    X, y = _toy_classification(jax.random.PRNGKey(0))
+    clf = train_linear(X, y, lam=1e-5, loss=loss)
+    assert clf.accuracy(X, y) > 0.97
+
+
+def test_kernel_ridge_and_svm_fit_nonlinear():
+    # XOR-ish data: not linearly separable, polynomial kernel separates it.
+    key = jax.random.PRNGKey(1)
+    X = jax.random.uniform(key, (300, 2), minval=-1, maxval=1) * 0.7
+    y = jnp.sign(X[:, 0] * X[:, 1])
+    y = jnp.where(y == 0, 1.0, y)
+    kern = PolynomialKernel(2, 0.1)
+    gram = kern.gram(X)
+
+    _, ridge = train_kernel_ridge(gram, y, lam=1e-6, kernel_fn=kern.gram, X_train=X)
+    assert ridge.accuracy(X, y) > 0.95
+
+    _, svm = train_kernel_svm(gram, y, C=10.0, n_epochs=30,
+                              kernel_fn=kern.gram, X_train=X)
+    assert svm.accuracy(X, y) > 0.95
+
+    # linear model on raw features CANNOT separate XOR...
+    lin_raw = train_linear(X, y, lam=1e-5)
+    assert lin_raw.accuracy(X, y) < 0.8
+    # ...but a linear model on RM features of the same kernel CAN (the
+    # paper's entire point).
+    fm = make_feature_map(kern, 2, 512, jax.random.PRNGKey(2),
+                          measure="proportional", stratified=True)
+    lin_rm = train_linear(fm(X), y, lam=1e-6)
+    assert lin_rm.accuracy(fm(X), y) > 0.93

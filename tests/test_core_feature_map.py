@@ -1,0 +1,180 @@
+"""Tests for Algorithm 1 (Random Maclaurin feature maps), H0/1, §4.2, bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    HomogeneousPolynomialKernel,
+    PolynomialKernel,
+    VovkRealKernel,
+    constants_for,
+    degree_measure,
+    make_feature_map,
+    make_truncated_feature_map,
+    pointwise_failure_prob,
+    truncation_degree,
+)
+
+KERNELS = [
+    ExponentialDotProductKernel(1.0),
+    PolynomialKernel(7, 1.0),
+    HomogeneousPolynomialKernel(3),
+    VovkRealKernel(4),
+]
+
+
+def _unit_ball_points(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / (jnp.linalg.norm(x, axis=1, keepdims=True) * 1.05)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("stratified", [False, True])
+def test_gram_approximation_converges(kern, stratified):
+    key = jax.random.PRNGKey(42)
+    X = _unit_ball_points(key, 32, 10)
+    exact = np.asarray(kern.gram(X), dtype=np.float64)
+    scale = max(1.0, np.abs(exact).max())
+    errs = []
+    for D in (128, 2048):
+        # average the error over independent map draws so the 1/sqrt(D)
+        # convergence is visible through seed noise (iid-geometric is heavy
+        # tailed for polynomial kernels — paper Fig 1b shows the same).
+        e = 0.0
+        for s in range(3):
+            fm = make_feature_map(
+                kern, 10, D, jax.random.PRNGKey(7 + s), stratified=stratified,
+                measure="proportional" if stratified else "geometric",
+            )
+            approx = np.asarray(fm.estimate_gram(X), dtype=np.float64)
+            e += np.mean(np.abs(approx - exact)) / scale
+        errs.append(e / 3.0)
+    # 16x features ~> 4x error drop; accept 1.6x for robustness, or already
+    # tiny error at the large D.
+    assert errs[1] < errs[0] / 1.6 or errs[1] < 0.01, errs
+    assert errs[1] < 0.15, errs
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_unbiasedness_over_map_draws(kern):
+    """E over feature-map draws of <Z(x),Z(y)> equals K(x,y) (iid mode)."""
+    key = jax.random.PRNGKey(0)
+    X = _unit_ball_points(key, 8, 6)
+    exact = np.asarray(kern.gram(X), dtype=np.float64)
+    acc = np.zeros_like(exact)
+    reps = 12
+    for i in range(reps):
+        fm = make_feature_map(kern, 6, 256, jax.random.PRNGKey(100 + i),
+                              stratified=False)
+        acc += np.asarray(fm.estimate_gram(X), dtype=np.float64)
+    mean = acc / reps
+    scale = max(1.0, np.abs(exact).max())
+    # Monte-Carlo mean over 12 x 256 features: tolerate ~3 sigma.
+    assert np.mean(np.abs(mean - exact)) / scale < 0.05
+
+
+def test_homogeneous_only_samples_its_degree():
+    kern = HomogeneousPolynomialKernel(5)
+    fm = make_feature_map(kern, 8, 256, jax.random.PRNGKey(0))
+    assert fm.degrees == (5,)
+    assert fm.counts == (256,)
+    assert fm.const is None
+
+
+def test_h01_exact_low_order_terms():
+    """With D=tiny, H0/1 still gets a_0 + a_1<x,y> exactly right."""
+    kern = PolynomialKernel(2, 1.0)  # (1+x)^2 = 1 + 2x + x^2
+    key = jax.random.PRNGKey(3)
+    X = _unit_ball_points(key, 16, 5)
+    fm = make_feature_map(kern, 5, 4096, key, h01=True)
+    approx = np.asarray(fm.estimate_gram(X))
+    exact = np.asarray(kern.gram(X))
+    assert np.mean(np.abs(approx - exact)) < 0.05
+    # degree <= 1 features are exact: subtracting them leaves only x^2 term
+    lin_part = 1.0 + 2.0 * np.asarray(X @ X.T)
+    z = np.asarray(fm(X))
+    got_lin = z[:, : 1 + 5] @ z[:, : 1 + 5].T
+    np.testing.assert_allclose(got_lin, lin_part, rtol=1e-4, atol=1e-4)
+
+
+def test_h01_rejects_homogeneous():
+    with pytest.raises(ValueError, match="no-op"):
+        make_feature_map(HomogeneousPolynomialKernel(4), 5, 64,
+                         jax.random.PRNGKey(0), h01=True)
+
+
+def test_degree_measure_properties():
+    kern = ExponentialDotProductKernel(1.0)
+    for kind in ("geometric", "geometric_ge2", "proportional"):
+        q = degree_measure(kern, 24, kind=kind)
+        assert abs(q.sum() - 1.0) < 1e-12
+        assert (q >= 0).all()
+    q2 = degree_measure(kern, 24, kind="geometric_ge2")
+    assert q2[0] == 0.0 and q2[1] == 0.0
+    # zero-coefficient degrees excluded from support
+    qh = degree_measure(HomogeneousPolynomialKernel(3), 24, kind="geometric")
+    assert qh[3] == 1.0 and qh.sum() == 1.0
+
+
+def test_truncation_degree_monotone():
+    kern = ExponentialDotProductKernel(1.0)
+    k1, t1 = truncation_degree(kern, 1.0, 1e-2)
+    k2, t2 = truncation_degree(kern, 1.0, 1e-6)
+    assert k2 > k1
+    assert t1 <= 1e-2 and t2 <= 1e-6
+
+
+def test_truncated_map_bias_bounded():
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_truncated_feature_map(kern, 6, 2000, jax.random.PRNGKey(0),
+                                    radius=1.0, eps_trunc=1e-3)
+    assert fm.truncation_bias(1.0) < 2e-3
+
+
+def test_bounds_paper_vs_proportional():
+    kern = ExponentialDotProductKernel(1.0)
+    c = constants_for(kern, radius=1.0, dim=16, p=2.0)
+    # paper: C = p f(p R^2) = 2 e^2; proportional: f(R^2) = e
+    assert np.isclose(c.c_omega, 2.0 * np.e**2)
+    assert np.isclose(c.c_proportional, np.e)
+    assert c.required_d(0.1, 0.01, "proportional") < c.required_d(0.1, 0.01)
+    # pointwise Hoeffding decays with D
+    p1 = pointwise_failure_prob(c, 1000, 0.5)
+    p2 = pointwise_failure_prob(c, 100000, 0.5)
+    assert p2 < p1 < 2.0
+
+
+def test_bounds_radius_guard():
+    from repro.core import VovkInfiniteKernel
+
+    with pytest.raises(ValueError, match="radius"):
+        constants_for(VovkInfiniteKernel(), radius=1.0, dim=4, p=2.0)
+
+
+def test_feature_map_is_pytree():
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_feature_map(kern, 4, 64, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(fm)
+    fm2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    x = jnp.ones((3, 4)) * 0.2
+    np.testing.assert_allclose(np.asarray(fm(x)), np.asarray(fm2(x)))
+
+    @jax.jit
+    def apply(m, x):
+        return m(x)
+
+    np.testing.assert_allclose(np.asarray(apply(fm, x)), np.asarray(fm(x)),
+                               rtol=1e-6)
+
+
+def test_batch_shape_handling():
+    kern = PolynomialKernel(3, 1.0)
+    fm = make_feature_map(kern, 8, 128, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 8)) * 0.1
+    z = fm(x)
+    assert z.shape == (2, 5, fm.output_dim)
+    z_flat = fm(x.reshape(10, 8))
+    np.testing.assert_allclose(np.asarray(z.reshape(10, -1)),
+                               np.asarray(z_flat), rtol=1e-6)

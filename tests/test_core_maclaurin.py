@@ -1,0 +1,87 @@
+"""Unit tests for the kernel zoo and Maclaurin coefficients."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    HomogeneousPolynomialKernel,
+    MaclaurinKernel,
+    PolynomialKernel,
+    VovkInfiniteKernel,
+    VovkRealKernel,
+    kernel_from_name,
+)
+
+KERNELS = [
+    ExponentialDotProductKernel(1.0),
+    ExponentialDotProductKernel(4.0),
+    PolynomialKernel(10, 1.0),
+    PolynomialKernel(3, 0.5),
+    HomogeneousPolynomialKernel(10),
+    HomogeneousPolynomialKernel(2),
+    VovkRealKernel(5),
+    VovkInfiniteKernel(),
+]
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_series_matches_closed_form(kern):
+    xs = np.linspace(-0.8, 0.8, 17)
+    if np.isfinite(kern.radius):
+        xs = xs * min(0.9, kern.radius)
+    np.testing.assert_allclose(
+        kern.series_eval(xs, 96), np.asarray(kern.f(xs), dtype=np.float64),
+        rtol=1e-8, atol=1e-8,
+    )
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_fprime_matches_finite_difference(kern):
+    xs = np.linspace(-0.5, 0.5, 7)
+    h = 1e-6
+    fd = (np.asarray(kern.f(xs + h)) - np.asarray(kern.f(xs - h))) / (2 * h)
+    np.testing.assert_allclose(np.asarray(kern.fprime(xs)), fd, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_positive_definite_validation_passes(kern):
+    kern.validate_positive_definite()
+
+
+def test_negative_coefficient_detected():
+    bad = MaclaurinKernel(coef_fn=lambda n: (-1.0) ** n, label="alternating")
+    with pytest.raises(ValueError, match="negative Maclaurin"):
+        bad.validate_positive_definite()
+
+
+def test_exponential_coefficients_are_inverse_factorials():
+    k = ExponentialDotProductKernel(1.0)
+    for n in range(12):
+        assert math.isclose(k.coef(n), 1.0 / math.factorial(n), rel_tol=1e-12)
+
+
+def test_polynomial_coefficients_binomial():
+    k = PolynomialKernel(4, 2.0)
+    # (x+2)^4 = 16 + 32x + 24x^2 + 8x^3 + x^4
+    np.testing.assert_allclose(k.coefs(5), [16, 32, 24, 8, 1, 0])
+
+
+def test_kernel_from_name_roundtrip():
+    assert kernel_from_name("exp", sigma2=2.0).sigma2 == 2.0
+    assert kernel_from_name("poly", degree=3).degree == 3
+    assert kernel_from_name("homogeneous", degree=2).degree == 2
+    with pytest.raises(ValueError):
+        kernel_from_name("nonexistent")
+
+
+def test_gram_psd_on_unit_ball():
+    """Schoenberg: the exact Gram matrix must be PSD for points in B_2(0,1)."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(40, 8))
+    X /= np.linalg.norm(X, axis=1, keepdims=True) * 1.01
+    for kern in KERNELS:
+        G = np.asarray(kern.gram(X), dtype=np.float64)
+        eigs = np.linalg.eigvalsh((G + G.T) / 2)
+        assert eigs.min() > -1e-6 * max(1.0, eigs.max()), kern.name

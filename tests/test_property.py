@@ -1,0 +1,186 @@
+"""Hypothesis property-based tests on the system's invariants.
+
+Paper invariants:
+  * Lemma 8: |Z(x) Z(y)| <= p f(p R^2) for x, y in B_1(0, R) (paper measure);
+  * proportional-measure bound: |Z(x) Z(y)| <= f(R^2) (DESIGN.md §3);
+  * degree measures are normalized distributions on the coefficient support;
+  * Theorem 12's D is monotone in 1/eps and 1/delta.
+
+System invariants:
+  * int8 quantization round-trip error <= scale/2; error feedback is exact
+    over time (sum of dequantized == sum of inputs + final residual);
+  * checkpoint flatten/unflatten is a bijection;
+  * sharding specs always divide the dims they shard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.tree import flatten_dict, unflatten_dict
+from repro.core import (
+    ExponentialDotProductKernel,
+    PolynomialKernel,
+    constants_for,
+    degree_measure,
+    make_feature_map,
+)
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**_SETTINGS)
+@given(
+    seed=st.integers(0, 2**20),
+    d=st.integers(2, 12),
+    radius=st.floats(0.2, 1.0),
+)
+def test_lemma8_estimator_bound(seed, d, radius):
+    """|Z(x).Z(y)| <= p f(p R^2) uniformly (paper Lemma 8).
+
+    The bound holds per-feature; the concatenated estimate is an average of
+    per-feature products so it obeys the same bound.
+    """
+    kern = ExponentialDotProductKernel(1.0)
+    key = jax.random.PRNGKey(seed)
+    fm = make_feature_map(kern, d, 64, key, p=2.0, measure="geometric",
+                          stratified=False)
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed + 1))
+    # x, y in B_1(0, R): sample and rescale to L1 norm <= R
+    x = jax.random.normal(kx, (16, d))
+    y = jax.random.normal(ky, (16, d))
+    x = x / jnp.sum(jnp.abs(x), axis=1, keepdims=True) * radius
+    y = y / jnp.sum(jnp.abs(y), axis=1, keepdims=True) * radius
+    est = np.asarray(fm(x) @ fm(y).T)
+    bound = 2.0 * float(kern.f(2.0 * radius**2))
+    assert np.abs(est).max() <= bound + 1e-4
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**20), radius=st.floats(0.2, 1.0))
+def test_proportional_measure_tighter_bound(seed, radius):
+    """With q_n ∝ a_n R^{2n}, |Z(x).Z(y)| <= f(R^2) — the beyond-paper
+    constant (strictly smaller than Lemma 8's)."""
+    kern = ExponentialDotProductKernel(1.0)
+    d = 6
+    fm = make_feature_map(kern, d, 64, jax.random.PRNGKey(seed),
+                          measure="proportional", stratified=False,
+                          radius=radius)
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed + 1))
+    x = jax.random.normal(kx, (16, d))
+    y = jax.random.normal(ky, (16, d))
+    x = x / jnp.sum(jnp.abs(x), axis=1, keepdims=True) * radius
+    y = y / jnp.sum(jnp.abs(y), axis=1, keepdims=True) * radius
+    est = np.asarray(fm(x) @ fm(y).T)
+    assert np.abs(est).max() <= float(kern.f(radius**2)) + 1e-4
+
+
+@settings(**_SETTINGS)
+@given(
+    n_max=st.integers(4, 32),
+    p=st.floats(1.5, 4.0),
+    kind=st.sampled_from(["geometric", "geometric_ge2", "proportional"]),
+)
+def test_degree_measure_is_distribution(n_max, p, kind):
+    kern = PolynomialKernel(5, 1.0)
+    q = degree_measure(kern, n_max, p=p, kind=kind)
+    assert abs(q.sum() - 1.0) < 1e-9
+    assert (q >= 0).all()
+    coefs = kern.coefs(n_max)
+    assert (q[coefs == 0] == 0).all()
+
+
+@settings(**_SETTINGS)
+@given(
+    eps=st.floats(0.05, 0.5),
+    delta=st.floats(0.001, 0.2),
+)
+def test_required_d_monotone(eps, delta):
+    c = constants_for(ExponentialDotProductKernel(1.0), 1.0, 8)
+    assert c.required_d(eps, delta) >= c.required_d(eps * 1.5, delta)
+    assert c.required_d(eps, delta) >= c.required_d(eps, delta * 2)
+    assert c.required_d(eps, delta, "proportional") <= c.required_d(eps, delta)
+
+
+@settings(**_SETTINGS)
+@given(
+    seed=st.integers(0, 2**20),
+    scale=st.floats(1e-4, 1e3),
+)
+def test_int8_quantization_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6 * scale
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**20))
+def test_error_feedback_unbiased_over_time(seed):
+    """Sum over steps of compressed values + final residual == sum of
+    inputs: error feedback never loses mass (1-bit-Adam property)."""
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (20, 32))
+    residual = jnp.zeros((32,))
+    total_sent = jnp.zeros((32,))
+    for t in range(20):
+        corrected = xs[t] + residual
+        q, s = quantize_int8(corrected)
+        sent = dequantize_int8(q, s)
+        residual = corrected - sent
+        total_sent = total_sent + sent
+    np.testing.assert_allclose(
+        np.asarray(total_sent + residual), np.asarray(xs.sum(0)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(**_SETTINGS)
+@given(
+    keys=st.lists(
+        st.text(alphabet="abcdef", min_size=1, max_size=4),
+        min_size=1, max_size=6, unique=True,
+    ),
+    depth=st.integers(1, 3),
+)
+def test_flatten_unflatten_bijection(keys, depth):
+    tree = {}
+    node = tree
+    for level in range(depth):
+        for k in keys:
+            node[k] = np.zeros((2,)) if level == depth - 1 else {}
+        node = node[keys[0]] if depth > level + 1 else node
+    flat = flatten_dict(tree)
+    rebuilt = unflatten_dict(flat)
+    assert jax.tree_util.tree_structure(tree) == \
+        jax.tree_util.tree_structure(rebuilt)
+
+
+def test_sharding_specs_divide_dims():
+    """Every PartitionSpec produced for every arch divides its dims on the
+    PRODUCTION meshes (the invariant behind every dry-run compile) — checked
+    via AbstractMesh, no devices needed."""
+    from jax.sharding import AbstractMesh
+
+    from repro.configs import get_config, list_archs
+    from repro.distributed.sharding import params_partition_specs
+    from repro.models.transformer import init_model
+
+    for mesh in (AbstractMesh((16, 16), ("data", "model")),
+                 AbstractMesh((2, 16, 16), ("pod", "data", "model"))):
+        for arch in list_archs():
+            cfg = get_config(arch)
+            sds = jax.eval_shape(
+                lambda c=cfg: init_model(c, jax.random.PRNGKey(0)))
+            specs = params_partition_specs(sds, mesh)
+            flat_s = flatten_dict(specs)
+            flat_p = flatten_dict(sds)
+            for path, spec in flat_s.items():
+                shape = flat_p[path].shape
+                for dim, axis in zip(shape, tuple(spec)):
+                    if axis is None:
+                        continue
+                    axes = axis if isinstance(axis, tuple) else (axis,)
+                    size = int(np.prod([mesh.shape[a] for a in axes]))
+                    assert dim % size == 0, (arch, path, shape, spec)

@@ -1,0 +1,88 @@
+"""Integration: the Trainer learns, checkpoints, resumes deterministically;
+the data pipeline is step-indexed & host-shardable."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models.config import ModelConfig
+from repro.train.steps import TrainHyper
+from repro.train.trainer import Trainer
+
+CFG = ModelConfig(name="itiny", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=128,
+                  tie_embeddings=True).validate()
+
+
+def _mk_trainer(tmp=None, steps=24):
+    data = SyntheticLMDataset(vocab_size=128, seq_len=64, global_batch=4,
+                              num_contexts=64)
+    hyper = TrainHyper(peak_lr=5e-3, warmup_steps=3, total_steps=steps)
+    return Trainer(CFG, hyper, data, ckpt_dir=tmp, log_every=100,
+                   checkpoint_every=10)
+
+
+def test_loss_decreases():
+    tr = _mk_trainer(steps=25)
+    tr.train(25)
+    first = tr.metrics_log[0]["ce"]
+    last = tr.metrics_log[-1]["ce"]
+    assert last < first - 0.2, (first, last)
+
+
+def test_checkpoint_resume_is_deterministic(tmp_path):
+    # run A: 20 straight steps
+    tr_a = _mk_trainer(str(tmp_path / "a"), steps=20)
+    state_a = tr_a.train(20)
+    # run B: 10 steps, "crash", new trainer resumes from step 10
+    tr_b1 = _mk_trainer(str(tmp_path / "b"), steps=20)
+    tr_b1.train(10)
+    tr_b2 = _mk_trainer(str(tmp_path / "b"), steps=20)
+    state_b = tr_b2.train(20)
+    wa = np.asarray(state_a["params"]["embed"]["embedding"])
+    wb = np.asarray(state_b["params"]["embed"]["embedding"])
+    np.testing.assert_allclose(wa, wb, rtol=1e-5, atol=1e-6)
+    assert int(state_a["step"]) == int(state_b["step"]) == 20
+
+
+def test_dataset_host_sharding_partitions_batch():
+    full = SyntheticLMDataset(vocab_size=64, seq_len=16, global_batch=4,
+                              seed=7)
+    parts = [
+        SyntheticLMDataset(vocab_size=64, seq_len=16, global_batch=4,
+                           seed=7, num_hosts=2, host_index=i)
+        for i in range(2)
+    ]
+    b_full = full.batch_at(3)
+    b0, b1 = parts[0].batch_at(3), parts[1].batch_at(3)
+    assert b0["tokens"].shape == (2, 16)
+    # deterministic per (step, host): re-evaluation is identical
+    np.testing.assert_array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(parts[0].batch_at(3)["tokens"]))
+    # and full-batch generation is reproducible
+    np.testing.assert_array_equal(np.asarray(b_full["tokens"]),
+                                  np.asarray(full.batch_at(3)["tokens"]))
+
+
+def test_grad_accum_equivalence():
+    """grad_accum=2 must produce the same update as accum=1 on the same
+    global batch (linearity of gradients + mean loss)."""
+    from repro.train.steps import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(CFG, compute_dtype="float32", remat=False)
+    data = SyntheticLMDataset(vocab_size=128, seq_len=32, global_batch=4)
+    batch = data.batch_at(0)
+    h1 = TrainHyper(peak_lr=1e-3, warmup_steps=1, total_steps=10,
+                    grad_accum=1)
+    h2 = dataclasses.replace(h1, grad_accum=2)
+    s1 = init_train_state(cfg, jax.random.PRNGKey(0), h1)
+    s2 = init_train_state(cfg, jax.random.PRNGKey(0), h2)
+    s1, m1 = jax.jit(make_train_step(cfg, h1))(s1, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, h2))(s2, batch)
+    np.testing.assert_allclose(float(m1["ce"]), float(m2["ce"]), rtol=1e-5)
+    w1 = np.asarray(s1["params"]["embed"]["embedding"])
+    w2 = np.asarray(s2["params"]["embed"]["embedding"])
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-6)
