@@ -1,6 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV. Sub-benchmarks: fig1 (approximation error), table1 (SVM suite),
-# fig2 (H0/1), rm_attn (the technique applied to attention), roofline
+# fig2 (H0/1), rm_attn (the technique applied to attention), rm_feature
+# (fused vs per-bucket feature map, writes BENCH_rm_feature.json), roofline
 # (dry-run derived terms).
 from __future__ import annotations
 
@@ -13,6 +14,7 @@ def main() -> None:
         fig1_approx,
         fig2_h01,
         rm_attention_bench,
+        rm_feature_bench,
         roofline_bench,
         table1_svm,
     )
@@ -23,6 +25,7 @@ def main() -> None:
         ("table1", table1_svm.run),
         ("fig2", fig2_h01.run),
         ("rm_attn", rm_attention_bench.run),
+        ("rm_feature", rm_feature_bench.run),
         ("roofline", roofline_bench.run),
     ]
     failed = False

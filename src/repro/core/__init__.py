@@ -10,6 +10,15 @@ from repro.core.maclaurin import (
     VovkRealKernel,
     kernel_from_name,
 )
+from repro.core.plan import (
+    FeaturePlan,
+    allocate_features,
+    apply_plan,
+    init_omegas,
+    make_feature_plan,
+    pack_omegas,
+    plan_output_dim,
+)
 from repro.core.feature_map import RMFeatureMap, degree_measure, make_feature_map
 from repro.core.truncated import make_truncated_feature_map, truncation_degree
 from repro.core.compositional import (
@@ -27,12 +36,21 @@ from repro.core.bounds import (
 )
 from repro.core.linear_models import (
     Classifier,
+    train_featurized_linear,
     train_kernel_ridge,
     train_kernel_svm,
     train_linear,
 )
 
 __all__ = [
+    "FeaturePlan",
+    "allocate_features",
+    "apply_plan",
+    "init_omegas",
+    "make_feature_plan",
+    "pack_omegas",
+    "plan_output_dim",
+    "train_featurized_linear",
     "DotProductKernel",
     "ExponentialDotProductKernel",
     "HomogeneousPolynomialKernel",

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.feature_map import degree_measure
 from repro.core.maclaurin import DotProductKernel
+from repro.core.plan import allocate_features
 
 __all__ = [
     "RademacherInnerMap",
@@ -177,23 +178,12 @@ def make_compositional_feature_map(
     coefs = dp_kernel.coefs(n_max)
 
     key_deg, key_inner = jax.random.split(key)
-    if stratified:
-        raw = q * num_features
-        counts_all = np.floor(raw).astype(np.int64)
-        deficit = num_features - int(counts_all.sum())
-        if deficit > 0:
-            order = np.argsort(-(raw - counts_all))
-            counts_all[order[:deficit]] += 1
-    else:
+    seed = 0
+    if not stratified:
         seed = int(jax.random.randint(key_deg, (), 0, 2**31 - 1))
-        rng = np.random.Generator(np.random.Philox(seed))
-        draws = rng.choice(len(q), size=num_features, p=q)
-        counts_all = np.bincount(draws, minlength=len(q)).astype(np.int64)
-
-    def bucket_scale(n: int, cnt: int) -> float:
-        if stratified:
-            return float(np.sqrt(coefs[n] / cnt))
-        return float(np.sqrt(coefs[n] / q[n]) / np.sqrt(num_features))
+    counts_all, scales_all = allocate_features(
+        coefs, q, num_features, stratified=stratified, seed=seed
+    )
 
     degrees: List[int] = []
     counts: List[int] = []
@@ -201,8 +191,9 @@ def make_compositional_feature_map(
     scales: List[jax.Array] = []
     const = None
     if counts_all[0] > 0:
-        c0 = int(counts_all[0])
-        const = jnp.asarray(np.sqrt(c0) * bucket_scale(0, c0), dtype=jnp.float32)
+        const = jnp.asarray(
+            np.sqrt(counts_all[0]) * scales_all[0], dtype=jnp.float32
+        )
 
     subkeys = jax.random.split(key_inner, int((counts_all[1:] > 0).sum()) + 1)
     ki = 0
@@ -214,7 +205,7 @@ def make_compositional_feature_map(
         ki += 1
         degrees.append(n)
         counts.append(cnt)
-        scales.append(jnp.asarray(bucket_scale(n, cnt), dtype=jnp.float32))
+        scales.append(jnp.asarray(scales_all[n], dtype=jnp.float32))
 
     return CompositionalFeatureMap(
         degrees=tuple(degrees),

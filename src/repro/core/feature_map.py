@@ -10,9 +10,10 @@ sample a degree ``N ~ P[N=n] = p^-(n+1)`` and ``N`` Rademacher vectors
 ``K(x,y) = f(<x,y>)`` (paper Lemmas 6-8, Theorem 12).
 
 TPU adaptation (see DESIGN.md §3): degrees are sampled ONCE at construction
-("static degree draws") and features are *bucketed by degree* so the whole map
-is a single ``[B,d] x [d, M]`` matmul followed by a segmented product over
-degree-length runs of columns — MXU-friendly, no per-feature control flow.
+("static degree draws") and the whole map is lowered to the ``FeaturePlan``
+packed layout (repro.core.plan) — a single ``[max_degree, F, d]`` omega
+tensor with per-column (degree, scale) metadata, applied as one fused masked
+product (one Pallas launch on TPU; ``__call__`` is the jnp parity path).
 
 Generalized external measure: the paper uses ``q_n = p^-(n+1)`` with the
 estimator scale ``sqrt(a_n / q_n) = sqrt(a_n p^(n+1))``. Any normalized
@@ -29,13 +30,14 @@ measure q with support covering {n : a_n > 0} keeps the estimator unbiased
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.maclaurin import DotProductKernel
+from repro.core.plan import FeaturePlan, apply_plan, init_omegas, make_feature_plan
 
 __all__ = ["RMFeatureMap", "make_feature_map", "degree_measure"]
 
@@ -86,72 +88,78 @@ def degree_measure(
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class RMFeatureMap:
-    """A materialized Random Maclaurin feature map (degree-bucketed).
+    """A materialized Random Maclaurin feature map.
 
-    Attributes
-    ----------
-    degrees:  sorted unique degrees with at least one feature, EXCLUDING 0.
-    counts:   #features per entry of ``degrees``.
-    omegas:   one array per entry of ``degrees``: ``[c_n * n, d]`` Rademacher
-              rows (consecutive runs of n rows belong to one feature).
-    scales:   per-degree feature scale ``sqrt(a_n / q_n) / sqrt(D)``.
-    const:    value contributed by all degree-0 features combined (a scalar;
-              ``sqrt(a_0/q_0)/sqrt(D)`` repeated c_0 times -> represented as a
-              single column of value sqrt(c_0) * scale_0 for compactness).
-    h01:      if True the map is the H0/1 variant: output is
-              ``[sqrt(a_0), sqrt(a_1) * x, Z_{>=2}(x)]`` (paper §6.1).
+    Thin carrier of (``plan``, ``omegas``): the hashable ``FeaturePlan``
+    (degrees, counts, scales, const, H0/1 block — see repro.core.plan) plus
+    the flat ``[plan.total_rows, d]`` Rademacher draws that instantiate it.
+    Legacy per-bucket views (``degrees``/``counts``/``scales``/``const``)
+    are exposed as properties for diagnostics and older call sites.
     """
 
-    degrees: Tuple[int, ...]
-    counts: Tuple[int, ...]
-    omegas: List[jax.Array]
-    scales: List[jax.Array]
-    const: Optional[jax.Array]
-    h01: bool
-    h01_coefs: Optional[jax.Array]  # [2] = (a_0, a_1) when h01
-    input_dim: int
-    num_random: int  # D
-    coefs_host: Tuple[float, ...] = ()  # a_0..a_{n_max} (host copies, for diag)
+    plan: FeaturePlan
+    omegas: jax.Array
 
     # -- pytree plumbing (lets the map ride inside jit/pjit closures) -------
     def tree_flatten(self):
-        children = (self.omegas, self.scales, self.const, self.h01_coefs)
-        aux = (
-            self.degrees,
-            self.counts,
-            self.h01,
-            self.input_dim,
-            self.num_random,
-            self.coefs_host,
-        )
-        return children, aux
+        return (self.omegas,), (self.plan,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        omegas, scales, const, h01_coefs = children
-        degrees, counts, h01, input_dim, num_random, coefs_host = aux
-        return cls(
-            degrees=degrees,
-            counts=counts,
-            omegas=omegas,
-            scales=scales,
-            const=const,
-            h01=h01,
-            h01_coefs=h01_coefs,
-            input_dim=input_dim,
-            num_random=num_random,
-            coefs_host=coefs_host,
-        )
+        (omegas,) = children
+        (plan,) = aux
+        return cls(plan=plan, omegas=omegas)
 
     # -- metadata ------------------------------------------------------------
     @property
+    def degrees(self) -> Tuple[int, ...]:
+        return self.plan.degrees
+
+    @property
+    def counts(self) -> Tuple[int, ...]:
+        return self.plan.counts
+
+    @property
+    def scales(self) -> Tuple[float, ...]:
+        return self.plan.scales
+
+    @property
+    def const(self) -> Optional[float]:
+        return self.plan.const if self.plan.const != 0.0 else None
+
+    @property
+    def h01(self) -> bool:
+        return self.plan.h01
+
+    @property
+    def h01_coefs(self) -> Optional[Tuple[float, float]]:
+        if not self.plan.h01:
+            return None
+        return (self.plan.h01_a0, self.plan.h01_a1)
+
+    @property
+    def input_dim(self) -> int:
+        return self.plan.input_dim
+
+    @property
+    def num_random(self) -> int:
+        return self.plan.num_random
+
+    @property
+    def coefs_host(self) -> Tuple[float, ...]:
+        return self.plan.coefs_host
+
+    @property
     def output_dim(self) -> int:
-        dim = sum(self.counts)
-        if self.const is not None:
-            dim += 1
-        if self.h01:
-            dim += 1 + self.input_dim
-        return dim
+        return self.plan.output_dim
+
+    def bucket_omegas(self) -> List[jax.Array]:
+        """Per-degree views into the flat draws: one [c_n * n, d] block each."""
+        out, off = [], 0
+        for n, c in zip(self.plan.degrees, self.plan.counts):
+            out.append(self.omegas[off : off + c * n])
+            off += c * n
+        return out
 
     def truncation_bias(self, radius: float) -> float:
         """sup_{|<x,y>| <= radius^2} of the dropped-degree mass.
@@ -162,49 +170,19 @@ class RMFeatureMap:
         sampling support; for stratified mode this is the §4.2-style
         truncation error).
         """
-        present = set(self.degrees)
-        if self.const is not None:
-            present.add(0)
-        if self.h01:
-            present.update((0, 1))
-        bias = 0.0
-        for n, a_n in enumerate(self.coefs_host):
-            if a_n > 0.0 and n not in present:
-                bias += a_n * radius ** (2 * n)
-        return bias
+        return self.plan.truncation_bias(radius)
 
     # -- application ----------------------------------------------------------
     def __call__(self, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
         """Apply the map to ``x`` of shape ``[..., d]`` -> ``[..., output_dim]``.
 
-        Pure-jnp path (the Pallas fused kernel lives in
+        Pure-jnp fused path (the Pallas launch lives in
         ``repro.kernels.rm_feature`` and is numerically checked against this).
         """
-        if x.shape[-1] != self.input_dim:
-            raise ValueError(
-                f"expected trailing dim {self.input_dim}, got {x.shape}"
-            )
-        batch_shape = x.shape[:-1]
-        xf = x.reshape(-1, self.input_dim).astype(accum_dtype)
-        feats = []
-        if self.h01:
-            a0, a1 = self.h01_coefs[0], self.h01_coefs[1]
-            feats.append(
-                jnp.full((xf.shape[0], 1), jnp.sqrt(a0), dtype=accum_dtype)
-            )
-            feats.append(jnp.sqrt(a1) * xf)
-        if self.const is not None:
-            feats.append(
-                jnp.broadcast_to(self.const, (xf.shape[0], 1)).astype(accum_dtype)
-            )
-        for deg, cnt, omega, scale in zip(
-            self.degrees, self.counts, self.omegas, self.scales
-        ):
-            proj = xf @ omega.astype(accum_dtype).T  # [B, cnt*deg]
-            proj = proj.reshape(xf.shape[0], cnt, deg)
-            feats.append(jnp.prod(proj, axis=-1) * scale.astype(accum_dtype))
-        z = jnp.concatenate(feats, axis=-1)
-        return z.reshape(*batch_shape, z.shape[-1])
+        return apply_plan(
+            self.plan, self.omegas, x, accum_dtype=accum_dtype,
+            use_pallas=False,
+        )
 
     # Convenience: the linear-kernel estimate of K.
     def estimate_gram(self, X: jax.Array, Y: Optional[jax.Array] = None):
@@ -229,7 +207,7 @@ def make_feature_map(
 ) -> RMFeatureMap:
     """Build an ``RMFeatureMap`` (Algorithm 1 / §6.1 H0/1 / beyond-paper measures).
 
-    Two allocation modes:
+    Two allocation modes (see ``core.plan.allocate_features``):
 
     * ``stratified=False`` — **paper-faithful Algorithm 1**: iid degree draws
       from q, per-feature scale ``sqrt(a_n / q_n) / sqrt(D)``. Exactly
@@ -241,83 +219,20 @@ def make_feature_map(
       truncated construction when q is the ``proportional`` measure). The
       dropped-degree mass is reported by ``RMFeatureMap.truncation_bias``.
     """
-    kernel.validate_positive_definite(n_max)
-    if h01 and measure == "geometric":
-        measure = "geometric_ge2"
-    q = degree_measure(kernel, n_max, p=p, kind=measure, radius=radius,
-                       min_degree=2 if h01 else 0)
-    coefs = kernel.coefs(n_max)
-
-    # --- draw / allocate per-degree counts ---------------------------------
     key_deg, key_omega = jax.random.split(key)
-    if stratified:
-        raw = q * num_features
-        counts_all = np.floor(raw).astype(np.int64)
-        # distribute the remainder to the largest fractional parts
-        deficit = num_features - int(counts_all.sum())
-        if deficit > 0:
-            order = np.argsort(-(raw - counts_all))
-            counts_all[order[:deficit]] += 1
-    else:
+    seed = 0
+    if not stratified:
         seed = int(jax.random.randint(key_deg, (), 0, 2**31 - 1))
-        rng = np.random.Generator(np.random.Philox(seed))
-        draws = rng.choice(len(q), size=num_features, p=q)
-        counts_all = np.bincount(draws, minlength=len(q)).astype(np.int64)
-
-    def bucket_scale(n: int, cnt: int) -> float:
-        if stratified:
-            return float(np.sqrt(coefs[n] / cnt))
-        return float(np.sqrt(coefs[n] / q[n]) / np.sqrt(num_features))
-
-    degrees: List[int] = []
-    counts: List[int] = []
-    omegas: List[jax.Array] = []
-    scales: List[jax.Array] = []
-    const = None
-
-    # degree-0 bucket: c_0 identical constant features collapse into a single
-    # column of value sqrt(c_0) * scale_0.
-    if counts_all[0] > 0:
-        c0 = int(counts_all[0])
-        const = jnp.asarray(
-            np.sqrt(c0) * bucket_scale(0, c0), dtype=jnp.float32
-        )
-
-    subkeys = jax.random.split(key_omega, int((counts_all[1:] > 0).sum()) + 1)
-    ki = 0
-    for n in range(1, n_max + 1):
-        cnt = int(counts_all[n])
-        if cnt == 0:
-            continue
-        rows = cnt * n
-        bern = jax.random.bernoulli(subkeys[ki], 0.5, (rows, input_dim))
-        ki += 1
-        omega = (2.0 * bern.astype(omega_dtype) - 1.0).astype(omega_dtype)
-        degrees.append(n)
-        counts.append(cnt)
-        omegas.append(omega)
-        scales.append(jnp.asarray(bucket_scale(n, cnt), dtype=jnp.float32))
-
-    h01_coefs = None
-    if h01:
-        a0 = float(kernel.coef(0))
-        a1 = float(kernel.coef(1))
-        if a0 == 0.0 and a1 == 0.0:
-            raise ValueError(
-                f"H0/1 is a no-op for kernel {kernel.name}: a_0 = a_1 = 0 "
-                "(e.g. homogeneous polynomial kernels — paper §6.2)."
-            )
-        h01_coefs = jnp.asarray([a0, a1], dtype=jnp.float32)
-
-    return RMFeatureMap(
-        degrees=tuple(degrees),
-        counts=tuple(counts),
-        omegas=omegas,
-        scales=scales,
-        const=const,
+    plan = make_feature_plan(
+        kernel,
+        input_dim,
+        num_features,
+        p=p,
+        measure=measure,
         h01=h01,
-        h01_coefs=h01_coefs,
-        input_dim=input_dim,
-        num_random=num_features,
-        coefs_host=tuple(float(c) for c in coefs),
+        n_max=n_max,
+        radius=radius,
+        stratified=stratified,
+        seed=seed,
     )
+    return RMFeatureMap(plan=plan, omegas=init_omegas(plan, key_omega, omega_dtype))

@@ -26,6 +26,7 @@ import numpy as np
 __all__ = [
     "Classifier",
     "train_linear",
+    "train_featurized_linear",
     "train_kernel_ridge",
     "train_kernel_svm",
 ]
@@ -129,6 +130,32 @@ def train_linear(
     y = jnp.asarray(y, jnp.float32)
     (w, b), _ = _fit_linear(X, y, jnp.float32(lam), loss, n_iters)
     return Classifier(decision_fn=lambda Z: jnp.asarray(Z, jnp.float32) @ w + b)
+
+
+def train_featurized_linear(
+    fmap,
+    X: jax.Array,
+    y: jax.Array,
+    lam: float = 1e-4,
+    loss: str = "squared_hinge",
+    n_iters: int = 20,
+    use_pallas: Optional[bool] = None,
+) -> Classifier:
+    """Paper pipeline in one call: featurize with an RM map, fit linear.
+
+    ``fmap`` is an ``RMFeatureMap`` (or anything exposing ``plan``/``omegas``);
+    train-time and decision-time featurization both run through the fused
+    single-launch path (``core.plan.apply_plan``), so the returned
+    ``Classifier.decision`` accepts RAW inputs, not features.
+    """
+    from repro.core.plan import apply_plan
+
+    def featurize(Z):
+        return apply_plan(fmap.plan, fmap.omegas, jnp.asarray(Z, jnp.float32),
+                          use_pallas=use_pallas)
+
+    base = train_linear(featurize(X), y, lam=lam, loss=loss, n_iters=n_iters)
+    return Classifier(decision_fn=lambda Z: base.decision(featurize(Z)))
 
 
 # ---------------------------------------------------------------------------

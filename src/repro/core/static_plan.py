@@ -1,48 +1,31 @@
 """Static (hashable) RM feature-map plans for use inside jitted models.
 
-The transformer stack scans over layers, so every layer must share the SAME
-plan *structure* (degrees/counts/scales) while carrying its OWN Rademacher
-draws as (non-trainable) parameters. This module splits the RMFeatureMap into
+Compatibility shim: the plan subsystem moved to ``repro.core.plan``
+(``FeaturePlan`` is the single source of truth for allocation, scales, and
+the fused packed layout). The transformer stack scans over layers, so every
+layer shares the SAME plan *structure* while carrying its OWN Rademacher
+draws as (non-trainable) parameters:
 
-  * ``PlanMeta``   — a hashable tuple of (degree, count, scale) triples plus
-                     the constant column, computed host-side from the kernel,
-  * ``init_omegas``— per-layer parameter initialization ([sum_n c_n * n, d]),
-  * ``apply_plan`` — the jit-friendly application given (meta, omegas, x).
-
-``apply_plan`` matches ``RMFeatureMap.__call__`` numerically (same bucketing)
-and has a Pallas-backed variant in repro.kernels.rm_feature.
+  * ``PlanMeta``   — alias of ``FeaturePlan`` (hashable, static through jit),
+  * ``init_omegas``— per-layer parameter initialization ([total_rows, d]),
+  * ``apply_plan`` — the jit-friendly fused application (ONE Pallas launch on
+                     TPU, its jnp mirror elsewhere).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.feature_map import degree_measure
 from repro.core.maclaurin import DotProductKernel
+from repro.core.plan import (
+    FeaturePlan,
+    apply_plan,
+    init_omegas,
+    make_feature_plan,
+    plan_output_dim,
+)
 
 __all__ = ["PlanMeta", "make_plan_meta", "init_omegas", "apply_plan",
            "plan_output_dim"]
 
-
-class PlanMeta(NamedTuple):
-    """Hashable plan: static through jit/scan. Scales baked as floats."""
-
-    degrees: Tuple[int, ...]     # ascending, degree >= 1 buckets
-    counts: Tuple[int, ...]
-    scales: Tuple[float, ...]
-    const: float                 # 0.0 when absent; else the degree-0 column
-    input_dim: int
-
-    @property
-    def total_rows(self) -> int:
-        return int(sum(c * n for c, n in zip(self.counts, self.degrees)))
-
-    @property
-    def output_dim(self) -> int:
-        return int(sum(self.counts)) + (1 if self.const != 0.0 else 0)
+PlanMeta = FeaturePlan
 
 
 def make_plan_meta(
@@ -56,98 +39,17 @@ def make_plan_meta(
     n_max: int = 16,
     radius: float = 1.0,
     seed: int = 0,
-) -> PlanMeta:
-    """Host-side plan construction (mirrors core.feature_map.make_feature_map)."""
-    kernel.validate_positive_definite(n_max)
-    q = degree_measure(kernel, n_max, p=p, kind=measure, radius=radius)
-    coefs = kernel.coefs(n_max)
-
-    if stratified:
-        raw = q * num_features
-        counts_all = np.floor(raw).astype(np.int64)
-        deficit = num_features - int(counts_all.sum())
-        if deficit > 0:
-            order = np.argsort(-(raw - counts_all))
-            counts_all[order[:deficit]] += 1
-    else:
-        rng = np.random.Generator(np.random.Philox(seed))
-        draws = rng.choice(len(q), size=num_features, p=q)
-        counts_all = np.bincount(draws, minlength=len(q)).astype(np.int64)
-
-    def bucket_scale(n: int, cnt: int) -> float:
-        if stratified:
-            return float(np.sqrt(coefs[n] / cnt))
-        return float(np.sqrt(coefs[n] / q[n]) / np.sqrt(num_features))
-
-    degrees, counts, scales = [], [], []
-    const = 0.0
-    if counts_all[0] > 0:
-        c0 = int(counts_all[0])
-        const = float(np.sqrt(c0) * bucket_scale(0, c0))
-    for n in range(1, n_max + 1):
-        cnt = int(counts_all[n])
-        if cnt:
-            degrees.append(n)
-            counts.append(cnt)
-            scales.append(bucket_scale(n, cnt))
-    return PlanMeta(
-        degrees=tuple(degrees),
-        counts=tuple(counts),
-        scales=tuple(scales),
-        const=const,
-        input_dim=input_dim,
+) -> FeaturePlan:
+    """Host-side plan construction (thin wrapper over core.plan)."""
+    return make_feature_plan(
+        kernel,
+        input_dim,
+        num_features,
+        p=p,
+        measure=measure,
+        h01=False,
+        n_max=n_max,
+        radius=radius,
+        stratified=stratified,
+        seed=seed,
     )
-
-
-def init_omegas(meta: PlanMeta, key: jax.Array, dtype=jnp.float32) -> jax.Array:
-    """All Rademacher rows for one plan instance, concatenated: [rows, d]."""
-    bern = jax.random.bernoulli(key, 0.5, (meta.total_rows, meta.input_dim))
-    return (2.0 * bern.astype(dtype) - 1.0).astype(dtype)
-
-
-def apply_plan(
-    meta: PlanMeta,
-    omegas: jax.Array,
-    x: jax.Array,
-    accum_dtype=jnp.float32,
-    use_pallas: Optional[bool] = None,
-) -> jax.Array:
-    """Featurize ``x [..., d] -> [..., meta.output_dim]``.
-
-    XLA path: one fused projection ``x @ omegas.T`` then per-bucket
-    segmented products. On TPU (``use_pallas`` defaults to the backend) each
-    bucket routes to the fused Pallas kernel instead
-    (repro.kernels.rm_feature) — same layout, VMEM-tiled.
-    """
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    batch_shape = x.shape[:-1]
-    xf = x.reshape(-1, meta.input_dim).astype(accum_dtype)
-    feats = []
-    if meta.const != 0.0:
-        feats.append(jnp.full((xf.shape[0], 1), meta.const, dtype=accum_dtype))
-    if use_pallas:
-        from repro.kernels.rm_feature.ops import rm_feature_bucket
-
-        off = 0
-        for deg, cnt, scale in zip(meta.degrees, meta.counts, meta.scales):
-            rows = cnt * deg
-            feats.append(
-                rm_feature_bucket(xf, omegas[off : off + rows], deg,
-                                  float(scale))
-            )
-            off += rows
-    else:
-        proj = xf @ omegas.astype(accum_dtype).T  # [B, total_rows]
-        off = 0
-        for deg, cnt, scale in zip(meta.degrees, meta.counts, meta.scales):
-            rows = cnt * deg
-            block = proj[:, off : off + rows].reshape(-1, cnt, deg)
-            feats.append(jnp.prod(block, axis=-1) * scale)
-            off += rows
-    z = jnp.concatenate(feats, axis=-1)
-    return z.reshape(*batch_shape, z.shape[-1])
-
-
-def plan_output_dim(meta: PlanMeta) -> int:
-    return meta.output_dim

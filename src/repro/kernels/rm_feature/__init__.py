@@ -1,3 +1,19 @@
-from repro.kernels.rm_feature.ops import apply_feature_map, rm_feature_bucket
+from repro.kernels.rm_feature.ops import (
+    apply_feature_map,
+    apply_feature_map_bucketed,
+    rm_feature_bucket,
+    rm_feature_fused,
+)
+from repro.kernels.rm_feature.ref import (
+    rm_feature_bucket_ref,
+    rm_feature_fused_ref,
+)
 
-__all__ = ["apply_feature_map", "rm_feature_bucket"]
+__all__ = [
+    "apply_feature_map",
+    "apply_feature_map_bucketed",
+    "rm_feature_bucket",
+    "rm_feature_fused",
+    "rm_feature_bucket_ref",
+    "rm_feature_fused_ref",
+]

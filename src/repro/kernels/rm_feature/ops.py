@@ -1,8 +1,10 @@
-"""jit'd public wrapper around the rm_feature Pallas kernel.
+"""jit'd public wrappers around the rm_feature Pallas kernels.
 
-Handles padding to MXU-aligned tiles, VMEM-budgeted block-size selection, and
-the multi-bucket (whole feature map) application. Falls back to the pure-jnp
-oracle automatically when Pallas is unavailable or shapes are degenerate.
+``rm_feature_fused`` applies a WHOLE feature map (FeaturePlan packed layout)
+in one Pallas launch: it pads (batch, feature) to MXU-aligned tiles, picks
+VMEM-budgeted block sizes, and falls back to the pure-jnp oracle when Pallas
+is off or the plan is degenerate (no product columns). ``rm_feature_bucket``
+is the legacy per-degree launch, kept as the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -12,8 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.rm_feature.ref import rm_feature_bucket_ref
-from repro.kernels.rm_feature.rm_feature import rm_feature_bucket_pallas
+from repro.kernels.rm_feature.ref import (
+    rm_feature_bucket_ref,
+    rm_feature_fused_ref,
+)
+from repro.kernels.rm_feature.rm_feature import (
+    rm_feature_bucket_pallas,
+    rm_feature_fused_pallas,
+)
 
 # Conservative per-core VMEM working-set budget (bytes). v5e has ~128MiB of
 # VMEM per core; we budget well under it to leave room for double buffering.
@@ -35,6 +43,66 @@ def _pick_blocks(d: int, degree: int, b: int, f: int) -> tuple[int, int]:
     return 8, 8
 
 
+# ---------------------------------------------------------------------------
+# fused whole-map application — ONE launch
+# ---------------------------------------------------------------------------
+def rm_feature_fused(
+    x: jax.Array,          # [..., d]
+    w: jax.Array,          # [max_degree, F, d] packed (core.plan.pack_omegas)
+    col_deg: jax.Array,    # [F] int32 per-column product depth
+    col_scale: jax.Array,  # [F] per-column scale
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:            # [..., F] float32
+    """Apply a packed feature map: one Pallas launch for every column."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch_shape = x.shape[:-1]
+    d = x.shape[-1]
+    k, f, _ = w.shape
+    xf = x.reshape(-1, d)
+    if not use_pallas or k == 0 or f == 0:
+        out = rm_feature_fused_ref(xf, w, col_deg, col_scale)
+        return out.reshape(*batch_shape, f)
+
+    b = xf.shape[0]
+    bm, bf = _pick_blocks(d, k, b, f)
+    b_pad = _round_up(max(b, bm), bm)
+    f_pad = _round_up(max(f, bf), bf)
+    xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, f_pad - f), (0, 0)))
+    deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, f_pad - f),))
+    scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, f_pad - f),))
+    out = rm_feature_fused_pallas(
+        xp, wp, deg_p, scale_p, block_b=bm, block_f=bf, interpret=interpret,
+    )
+    return out[:b, :f].reshape(*batch_shape, f)
+
+
+def apply_feature_map(
+    fmap,
+    x: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Pallas-accelerated equivalent of ``RMFeatureMap.__call__``.
+
+    Thin wrapper over the fused path: identical feature layout (h01 block,
+    const column, degree buckets ascending) in ONE launch, so downstream code
+    can swap paths freely.
+    """
+    from repro.core.plan import apply_plan
+
+    return apply_plan(
+        fmap.plan, fmap.omegas, x, use_pallas=use_pallas, interpret=interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# legacy per-bucket path (benchmark baseline / kernel tests)
+# ---------------------------------------------------------------------------
 def rm_feature_bucket(
     x: jax.Array,
     omega: jax.Array,
@@ -71,33 +139,35 @@ def rm_feature_bucket(
     return out[:b, :count].reshape(*batch_shape, count)
 
 
-def apply_feature_map(
+def apply_feature_map_bucketed(
     fmap,
     x: jax.Array,
     *,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Pallas-accelerated equivalent of ``RMFeatureMap.__call__``.
+    """The pre-fusion path: one launch PER degree bucket plus a concatenate.
 
-    Produces the identical feature layout (h01 block, const column, degree
-    buckets in ascending order) so downstream code can swap paths freely.
+    Kept only as the comparison baseline for parity tests and
+    ``benchmarks/rm_feature_bench.py``; production paths use
+    ``apply_feature_map`` / ``core.plan.apply_plan``.
     """
+    plan = fmap.plan
     batch_shape = x.shape[:-1]
-    xf = x.reshape(-1, fmap.input_dim)
+    xf = x.reshape(-1, plan.input_dim)
     feats = []
-    if fmap.h01:
-        a0, a1 = fmap.h01_coefs[0], fmap.h01_coefs[1]
-        feats.append(jnp.full((xf.shape[0], 1), jnp.sqrt(a0), dtype=jnp.float32))
-        feats.append(jnp.sqrt(a1) * xf.astype(jnp.float32))
-    if fmap.const is not None:
-        feats.append(jnp.broadcast_to(fmap.const, (xf.shape[0], 1)).astype(jnp.float32))
-    for deg, cnt, omega, scale in zip(fmap.degrees, fmap.counts, fmap.omegas,
-                                      fmap.scales):
+    if plan.h01:
+        feats.append(jnp.full((xf.shape[0], 1), np.sqrt(plan.h01_a0),
+                              dtype=jnp.float32))
+        feats.append(np.sqrt(plan.h01_a1) * xf.astype(jnp.float32))
+    if plan.const != 0.0:
+        feats.append(jnp.full((xf.shape[0], 1), plan.const, dtype=jnp.float32))
+    for deg, scale, omega in zip(plan.degrees, plan.scales,
+                                 fmap.bucket_omegas()):
         feats.append(
             rm_feature_bucket(
-                xf, omega, deg, float(scale), use_pallas=use_pallas,
-                interpret=interpret,
+                xf, omega, deg, float(scale),
+                use_pallas=use_pallas, interpret=interpret,
             )
         )
     z = jnp.concatenate(feats, axis=-1)

@@ -1,13 +1,38 @@
-"""Pure-jnp oracle for the Random Maclaurin feature bucket.
+"""Pure-jnp oracles for the Random Maclaurin feature kernels.
 
-A "bucket" is the set of all features sharing one degree n (DESIGN.md §3):
-``omega`` holds ``count * degree`` Rademacher rows; feature i is
+``rm_feature_fused_ref`` mirrors the fused Pallas kernel over the
+``FeaturePlan`` packed layout (DESIGN.md §3): column f of the output is
+
+    z[b, f] = col_scale[f] * prod_{j < col_deg[f]} <w[j, f, :], x[b, :]>
+
+— const columns (depth 0) reduce to their scale, the H0/1 identity block is
+depth 1 with one-hot rows, degree-n buckets are depth n. This is the
+``use_pallas=False`` parity path used by ``RMFeatureMap.__call__`` and
+``apply_plan`` off-TPU.
+
+``rm_feature_bucket_ref`` is the legacy single-degree oracle: ``omega`` holds
+``count * degree`` Rademacher rows; feature i is
 ``scale * prod_{j<degree} <omega[i*degree+j], x>``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def rm_feature_fused_ref(
+    x: jax.Array,          # [B, d]
+    w: jax.Array,          # [max_degree, F, d]
+    col_deg: jax.Array,    # [F] int32
+    col_scale: jax.Array,  # [F]
+    accum_dtype=jnp.float32,
+) -> jax.Array:            # [B, F]
+    k = w.shape[0]
+    xf = x.astype(accum_dtype)
+    proj = jnp.einsum("bd,kfd->kbf", xf, w.astype(accum_dtype))
+    mask = jnp.arange(k)[:, None, None] < col_deg[None, None, :]
+    prod = jnp.prod(jnp.where(mask, proj, 1.0), axis=0)        # [B, F]
+    return prod * col_scale.astype(accum_dtype)
 
 
 def rm_feature_bucket_ref(

@@ -1,18 +1,26 @@
-"""Pallas TPU kernel: fused Random-Maclaurin feature bucket.
+"""Pallas TPU kernels for Random-Maclaurin feature maps.
 
-Computes, for a degree-n bucket of ``F`` features,
+Two kernels (DESIGN.md §3):
 
-    out[b, f] = scale * prod_{j < n} <omega[f, j, :], x[b, :]>
+``rm_feature_fused_pallas`` — the whole map in ONE launch. Inputs follow the
+``FeaturePlan`` packed layout: ``w [max_degree, F, d]`` holds every column's
+product slots (const columns use none, the H0/1 identity block uses slot 0,
+degree-n columns use slots 0..n-1), ``col_deg [F]`` is each column's product
+depth and ``col_scale [F]`` its final scale. Per (batch, feature) tile the
+kernel runs a masked running product
 
-as n back-to-back MXU matmuls with the running product held in VMEM —
-one HBM read of x / omega, one HBM write of the output tile. This is the
-TPU-native replacement for the paper's per-feature loop (DESIGN.md §3).
+    acc <- 1;  for j < max(col_deg in tile):  acc <- where(j < deg, acc * x W_j^T, acc)
 
-Tiling: grid (B/bm, F/bf); x tile [bm, d] and omega tile [n, bf, d] live in
-VMEM; the MXU sees [bm, d] x [d, bf] per product step. d is kept whole inside
-the block (RM attention uses d = d_head <= 256; the SVM path pads d to a
-multiple of 128). ``ops.py`` chooses bm/bf so the VMEM working set
-(bm*d + n*bf*d + 2*bm*bf floats) stays under the budget.
+as back-to-back MXU matmuls with the accumulator held in VMEM — one HBM read
+of x, one of w, one HBM write of the output tile, no per-bucket relaunch and
+no final concatenate. The loop bound is the max depth of the *tile*, not the
+global max: columns are laid out in ascending degree order, so low-degree
+tiles exit after their own depth (this is where the fused kernel beats the
+per-bucket path even on FLOPs).
+
+``rm_feature_bucket_pallas`` — the legacy single-bucket kernel (one launch
+per degree). Kept as the comparison baseline for tests and
+``benchmarks/rm_feature_bench.py``.
 """
 from __future__ import annotations
 
@@ -23,6 +31,65 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+# ---------------------------------------------------------------------------
+# fused whole-map kernel
+# ---------------------------------------------------------------------------
+def _rm_fused_kernel(x_ref, w_ref, deg_ref, scale_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bm, d]
+    deg = deg_ref[...]                            # [1, bf] int32
+    bm = x.shape[0]
+    bf = deg.shape[-1]
+
+    def step(j, acc):
+        w = pl.load(w_ref, (pl.ds(j, 1), slice(None), slice(None)))
+        w = w.reshape(w.shape[1], w.shape[2]).astype(jnp.float32)  # [bf, d]
+        pj = jax.lax.dot_general(
+            x, w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                         # [bm, bf]
+        return jnp.where(j < deg, acc * pj, acc)
+
+    depth = jnp.max(deg)                          # tile-local product depth
+    acc = jax.lax.fori_loop(0, depth, step, jnp.ones((bm, bf), jnp.float32))
+    o_ref[...] = (acc * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_f", "interpret")
+)
+def rm_feature_fused_pallas(
+    x: jax.Array,          # [B, d]              (B pre-padded to block_b)
+    w: jax.Array,          # [max_degree, F, d]  (F pre-padded to block_f)
+    col_deg: jax.Array,    # [F] int32           (padding columns: 0)
+    col_scale: jax.Array,  # [F] float32         (padding columns: 0)
+    *,
+    block_b: int = 256,
+    block_f: int = 128,
+    interpret: bool = False,
+) -> jax.Array:            # [B, F] float32
+    b, d = x.shape
+    k, f, _ = w.shape
+    assert b % block_b == 0 and f % block_f == 0, (b, f, block_b, block_f)
+    grid = (b // block_b, f // block_f)
+    return pl.pallas_call(
+        _rm_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_f, d), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((1, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_f), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.float32),
+        interpret=interpret,
+    )(x, w, col_deg.reshape(1, f), col_scale.reshape(1, f))
+
+
+# ---------------------------------------------------------------------------
+# legacy per-bucket kernel (comparison baseline)
+# ---------------------------------------------------------------------------
 def _rm_feature_kernel(x_ref, w_ref, o_ref, *, degree: int, scale: float):
     x = x_ref[...].astype(jnp.float32)            # [bm, d]
     acc = None

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.maclaurin import ExponentialDotProductKernel
-from repro.core.static_plan import PlanMeta, apply_plan, init_omegas, make_plan_meta
+from repro.core.plan import FeaturePlan, apply_plan, init_omegas, make_feature_plan
 from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_decode_step,
@@ -38,10 +38,10 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 # RM plan (shared helper)
 # ---------------------------------------------------------------------------
-def rm_plan_for(cfg: ModelConfig, input_dim: int) -> PlanMeta:
+def rm_plan_for(cfg: ModelConfig, input_dim: int) -> FeaturePlan:
     rm = cfg.rm
     kernel = ExponentialDotProductKernel(rm.sigma2)
-    return make_plan_meta(
+    return make_feature_plan(
         kernel,
         input_dim,
         rm.num_features,
@@ -54,8 +54,19 @@ def rm_plan_for(cfg: ModelConfig, input_dim: int) -> PlanMeta:
     )
 
 
+def rm_valid_mask(z: jax.Array, positions: jax.Array) -> jax.Array:
+    """Zero featurized keys at padded positions (position < 0).
+
+    The serving engine right-pads prompts to bucketed lengths with sentinel
+    positions (DESIGN.md §2); masked features contribute nothing to the
+    linear-attention prefix sums or the O(1) decode state. z: [B, H, T, F].
+    """
+    valid = (positions >= 0).astype(z.dtype)      # [B, T]
+    return z * valid[:, None, :, None]
+
+
 def _rm_featurize(
-    params: Params, cfg: ModelConfig, meta: PlanMeta, x: jax.Array
+    params: Params, cfg: ModelConfig, meta: FeaturePlan, x: jax.Array
 ) -> jax.Array:
     """[B, T, H, dh] -> [B, H, T, F]: l2-normalize, scale, featurize."""
     xf = x.astype(jnp.float32)
@@ -142,8 +153,13 @@ _BLOCK_K = 1024
 
 
 def _mask_block(cfg: ModelConfig, qp, kp):
-    """qp: [.., bq], kp: [.., bk] -> bool [.., bq, bk]."""
+    """qp: [.., bq], kp: [.., bk] -> bool [.., bq, bk].
+
+    Keys at negative positions are padding (bucketed prefill, DESIGN.md §2)
+    and are never attended to.
+    """
     m = jnp.ones(qp.shape + (kp.shape[-1],), dtype=bool)
+    m &= kp[..., None, :] >= 0
     if cfg.causal:
         m &= qp[..., :, None] >= kp[..., None, :]
     if cfg.sliding_window > 0:
@@ -357,7 +373,9 @@ def attention_prefill_cache(
         kr = _repeat_kv(k, cfg.q_per_kv)
         vr = _repeat_kv(v, cfg.q_per_kv)
         zq = _rm_featurize(params, cfg, meta, q)
-        zk = _rm_featurize(params, cfg, meta, kr)
+        # padded prompt positions (bucketed prefill) must not pollute the
+        # prefix sums or the O(1) decode state
+        zk = rm_valid_mask(_rm_featurize(params, cfg, meta, kr), positions)
         v_t = jnp.transpose(vr, (0, 2, 1, 3))
         out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
                                   eps=cfg.rm.eps)

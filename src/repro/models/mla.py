@@ -13,13 +13,13 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.static_plan import apply_plan, init_omegas
+from repro.core.plan import apply_plan, init_omegas
 from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_decode_step,
     rm_attention_prefill_final_state,
 )
-from repro.models.attention import NEG_INF, rm_plan_for, _rm_featurize
+from repro.models.attention import NEG_INF, rm_plan_for, rm_valid_mask, _rm_featurize
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, normal_init
 
@@ -137,7 +137,8 @@ def mla_prefill_cache(
     if cfg.attention_mode == "rm":
         q, k, v, _, _ = _mla_qkv(params, cfg, x, positions)
         meta = rm_plan_for(cfg, m.qk_nope_head_dim + m.qk_rope_head_dim)
-        zk = _rm_featurize(params, cfg, meta, k)
+        # mask features of padded (bucketed-prefill) positions out of the state
+        zk = rm_valid_mask(_rm_featurize(params, cfg, meta, k), positions)
         v_t = jnp.transpose(v, (0, 2, 1, 3))
         s, n = rm_attention_prefill_final_state(zk, v_t)
         return y, {"rm_s": s, "rm_n": n}

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import (
+    _split_kind,
     decode_step,
     init_decode_cache,
     prefill,
@@ -91,6 +92,14 @@ class ServingEngine:
             lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
         )
         self._prefill_cache: Dict[int, Callable] = {}
+        # Prompt-length bucketing (DESIGN.md §2): attention-family mixers
+        # tolerate right-padded prompts at sentinel positions (< 0) — the
+        # causal mask plus rm-state masking keep real outputs exact, so
+        # prefill compiles are bounded per bucket instead of per distinct
+        # prompt length. SSM mixers carry recurrent state through every
+        # position and would need per-step freezing; they keep exact lengths.
+        mixers = {_split_kind(kind)[0] for kind in cfg.block_pattern}
+        self._bucketed = mixers <= {"attn", "mla"}
 
     # -- public API -----------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -113,8 +122,8 @@ class ServingEngine:
         if length not in self._prefill_cache:
             cfg = self.cfg
 
-            def fn(params, tokens):
-                batch = {"tokens": tokens}
+            def fn(params, tokens, positions):
+                batch = {"tokens": tokens, "positions": positions}
                 return prefill(params, cfg, batch, self.max_len)
 
             self._prefill_cache[length] = jax.jit(fn)
@@ -126,17 +135,25 @@ class ServingEngine:
             slot = free.pop(0)
             req = self.queue.pop(0)
             t = len(req.prompt)
-            # one compile per distinct prompt length; production would
-            # right-pad to _bucket(t) with masked positions — kept exact
-            # here for clarity.
-            tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
-            logits, cache1 = self._prefill_fn(t)(self.params, tokens)
+            # right-pad to the bucketed length: one compile per bucket, not
+            # per distinct prompt length. Padding tokens sit at sentinel
+            # position -1 so no real query attends to them and no state
+            # accumulates them.
+            tb = min(_bucket(t), self.max_len) if self._bucketed else t
+            tb = max(tb, t)  # oversize prompts (t > max_len) stay exact
+            tokens = np.zeros((1, tb), np.int32)
+            tokens[0, :t] = np.asarray(req.prompt, np.int32)
+            positions = np.full((1, tb), -1, np.int32)
+            positions[0, :t] = np.arange(t, dtype=np.int32)
+            logits, cache1 = self._prefill_fn(tb)(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions)
+            )
             self._splice_cache(slot, cache1)
             state = RequestState(request=req, slot=slot, position=t,
                                  t_enqueue=time.time())
-            # first generated token from the last prefill logit
+            # first generated token from the LAST REAL prefill logit
             self._key, sub = jax.random.split(self._key)
-            tok = sample_token(logits[:, -1], sub, req.temperature)
+            tok = sample_token(logits[:, t - 1], sub, req.temperature)
             state.generated.append(int(tok[0]))
             state.t_first_token = time.time()
             self._tokens = self._tokens.at[slot, 0].set(tok[0])
@@ -189,7 +206,3 @@ class ServingEngine:
                 state.t_done = time.time()
                 self.finished[req.request_id] = state
                 self.slots[i] = None
-
-
-def _stacked(x) -> bool:
-    return x.ndim >= 2

@@ -15,7 +15,10 @@ System invariants:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.common.tree import flatten_dict, unflatten_dict
 from repro.core import (

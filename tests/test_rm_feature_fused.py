@@ -1,0 +1,150 @@
+"""Fused single-launch feature map: kernel-zoo parity + launch accounting.
+
+Three paths must agree to fp32 tolerance on every kernel in the zoo,
+h01 on/off × stratified on/off:
+
+  * fused Pallas kernel (interpret mode on CPU),
+  * fused jnp reference (``RMFeatureMap.__call__`` / ``use_pallas=False``),
+  * the legacy per-bucket path (``apply_feature_map_bucketed``).
+
+Also asserts the fused path issues exactly ONE pallas_call per feature-map
+application (the legacy path issues one per degree bucket).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    HomogeneousPolynomialKernel,
+    PolynomialKernel,
+    VovkRealKernel,
+    make_feature_map,
+)
+from repro.core.plan import apply_plan, init_omegas, make_feature_plan, pack_omegas
+from repro.kernels.rm_feature import (
+    apply_feature_map,
+    apply_feature_map_bucketed,
+    rm_feature_fused,
+    rm_feature_fused_ref,
+)
+
+KERNELS = [
+    ExponentialDotProductKernel(1.0),
+    PolynomialKernel(7, 1.0),
+    HomogeneousPolynomialKernel(3),
+    VovkRealKernel(4),
+]
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("h01", [False, True])
+@pytest.mark.parametrize("stratified", [False, True])
+def test_zoo_parity_fused_vs_reference_vs_bucketed(kern, h01, stratified):
+    if h01 and kern.coef(0) == 0.0 and kern.coef(1) == 0.0:
+        pytest.skip("H0/1 undefined for homogeneous kernels (paper §6.2)")
+    fm = make_feature_map(kern, 24, 192, jax.random.PRNGKey(5), h01=h01,
+                          stratified=stratified)
+    x = jax.random.normal(jax.random.PRNGKey(6), (11, 24)) * 0.25
+
+    want = fm(x)                                        # fused jnp reference
+    got_pallas = apply_feature_map(fm, x, use_pallas=True, interpret=True)
+    got_bucketed = apply_feature_map_bucketed(fm, x, use_pallas=False)
+
+    assert want.shape == (11, fm.output_dim)
+    np.testing.assert_allclose(np.asarray(got_pallas), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_bucketed), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_is_one_pallas_launch():
+    """The whole map — const, h01 block, every degree — in ONE pallas_call."""
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_feature_map(kern, 16, 256, jax.random.PRNGKey(0), h01=True)
+    assert len(fm.plan.degrees) > 1  # multiple buckets, still one launch
+    x = jnp.ones((4, 16)) * 0.1
+
+    def count_in(jaxpr):
+        total = 0
+        for eqn in jaxpr.eqns:
+            if "pallas" in eqn.primitive.name:
+                total += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    total += count_in(v.jaxpr)   # ClosedJaxpr (pjit etc.)
+                elif hasattr(v, "eqns"):
+                    total += count_in(v)
+        return total
+
+    def count_launches(fn):
+        return count_in(jax.make_jaxpr(fn)(x).jaxpr)
+
+    fused = lambda xx: apply_feature_map(fm, xx, use_pallas=True,
+                                         interpret=True)
+    legacy = lambda xx: apply_feature_map_bucketed(fm, xx, use_pallas=True,
+                                                   interpret=True)
+    assert count_launches(fused) == 1
+    assert count_launches(legacy) == len(fm.plan.degrees)
+
+
+def test_fused_batch_dims_and_padding():
+    """Unaligned batch/feature sizes exercise the padding path."""
+    kern = PolynomialKernel(5, 0.5)
+    fm = make_feature_map(kern, 13, 97, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 5, 13)) * 0.2
+    want = fm(x)
+    got = apply_feature_map(fm, x, use_pallas=True, interpret=True)
+    assert got.shape == (3, 5, fm.output_dim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_plan_column_layout_consistency():
+    """Host-side column metadata matches the realized output layout."""
+    kern = ExponentialDotProductKernel(1.0)
+    plan = make_feature_plan(kern, 8, 128, h01=True)
+    col_deg = plan.column_degrees()
+    col_scale = plan.column_scales()
+    assert col_deg.shape == (plan.output_dim,)
+    assert col_scale.shape == (plan.output_dim,)
+    # prefix: h01 const (deg 0), identity block (deg 1), const column (deg 0)
+    assert col_deg[0] == 0
+    assert (col_deg[1 : 1 + plan.input_dim] == 1).all()
+    # buckets ascending => column degrees are non-decreasing after the prefix
+    tail = col_deg[plan.num_prefix_columns :]
+    assert (np.diff(tail) >= 0).all()
+    # packed tensor shape
+    om = init_omegas(plan, jax.random.PRNGKey(0))
+    w = pack_omegas(plan, om)
+    assert w.shape == (plan.max_degree, plan.output_dim, plan.input_dim)
+
+
+def test_const_only_plan_degenerate():
+    """A plan with no product columns skips the kernel entirely."""
+    kern = PolynomialKernel(3, 1.0)
+    plan = make_feature_plan(kern, 4, 1, measure="proportional")
+    om = init_omegas(plan, jax.random.PRNGKey(0))
+    x = jnp.ones((2, 4)) * 0.3
+    z = apply_plan(plan, om, x, use_pallas=True, interpret=True)
+    assert z.shape == (2, plan.output_dim)
+    assert np.isfinite(np.asarray(z)).all()
+
+
+def test_rm_feature_fused_raw_api():
+    """Array-level fused op agrees with its reference on hand-built layouts."""
+    key = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(key)
+    b, d, f, kmax = 9, 12, 37, 4
+    x = jax.random.normal(k1, (b, d)) * 0.3
+    w = (2.0 * jax.random.bernoulli(k2, 0.5, (kmax, f, d)) - 1.0)
+    col_deg = jnp.asarray(np.random.default_rng(0).integers(0, kmax + 1, f),
+                          jnp.int32)
+    col_scale = jnp.asarray(np.random.default_rng(1).uniform(0.1, 2.0, f),
+                            jnp.float32)
+    want = rm_feature_fused_ref(x, w, col_deg, col_scale)
+    got = rm_feature_fused(x, w, col_deg, col_scale, use_pallas=True,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)

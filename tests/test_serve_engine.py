@@ -84,3 +84,39 @@ def test_engine_rejects_encoder(setup):
     cfg = get_config("hubert-xlarge", smoke=True)
     with pytest.raises(ValueError, match="encoder-only"):
         ServingEngine(cfg, {}, num_slots=1, max_len=16)
+
+
+def test_bucketed_prefill_rm_state_matches_unpadded():
+    """Right-padding a prompt to a bucket with sentinel positions must leave
+    the O(1) RM decode state (and the real-position logits) bit-unchanged —
+    padded keys are masked out of the prefix sums (DESIGN.md §2)."""
+    from repro.models.transformer import prefill
+
+    cfg = get_config("qwen3-1.7b", smoke=True, attention_mode="rm")
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    t, tb = 5, 16
+    prompt = rng.integers(0, cfg.vocab_size, size=t)
+
+    tokens = jnp.asarray(prompt[None, :], jnp.int32)
+    logits, cache = prefill(params, cfg, {"tokens": tokens}, 64)
+
+    padded = np.zeros((1, tb), np.int32)
+    padded[0, :t] = prompt
+    positions = np.full((1, tb), -1, np.int32)
+    positions[0, :t] = np.arange(t)
+    logits_p, cache_p = prefill(
+        params, cfg,
+        {"tokens": jnp.asarray(padded), "positions": jnp.asarray(positions)},
+        64,
+    )
+
+    np.testing.assert_allclose(np.asarray(logits_p[:, :t]),
+                               np.asarray(logits), rtol=1e-5, atol=1e-5)
+    flat = jax.tree_util.tree_leaves_with_path(cache)
+    flat_p = dict(jax.tree_util.tree_leaves_with_path(cache_p))
+    for path, leaf in flat:
+        np.testing.assert_allclose(np.asarray(flat_p[path]),
+                                   np.asarray(leaf), rtol=1e-5, atol=1e-6,
+                                   err_msg=str(path))
