@@ -1,0 +1,118 @@
+"""RM vs TensorSketch estimator benchmark at matched feature budgets.
+
+For each configuration, times one full feature-map application per estimator
+(features/sec over the batch) and measures Gram-estimation quality (RMSE
+against the exact kernel matrix on a held-out point set) at the SAME feature
+budget F — the head-to-head the estimator registry exists to answer.
+
+Paths per estimator:
+  * ``*_fused``  — the fused Pallas launch (``--interpret`` runs the Pallas
+                   interpreter off-TPU; compiled on TPU),
+  * ``*_jnp``    — the XLA mirror (flat matmul + segmented products for RM,
+                   CountSketch + jnp.fft for TensorSketch): what CPU runs in
+                   production.
+
+Writes ``BENCH_sketch.json`` at the repo root (uploaded as a CI artifact by
+the benchmark smoke job) so later PRs have an RM-vs-TS perf trajectory.
+
+Usage: python benchmarks/sketch_bench.py [--interpret] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    PolynomialKernel,
+    make_feature_map,
+)
+
+# (label, kernel, d, F, batch)
+_CONFIGS = [
+    ("exp_d64_F256_b1024", ExponentialDotProductKernel(1.0), 64, 256, 1024),
+    ("poly7_d32_F512_b512", PolynomialKernel(7, 1.0), 32, 512, 512),
+    ("exp_d24_F192_b512", ExponentialDotProductKernel(1.0), 24, 192, 512),
+]
+_QUICK_CONFIGS = [
+    ("exp_d16_F128_b128", ExponentialDotProductKernel(1.0), 16, 128, 128),
+    ("poly7_d16_F128_b128", PolynomialKernel(7, 1.0), 16, 128, 128),
+]
+
+
+def _time_call(fn, x, repeats: int = 5) -> float:
+    """Median wall-time (us) of a jitted call, excluding compile."""
+    fn(x).block_until_ready()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def _gram_rmse(fm, kern, d: int, n_points: int = 64) -> float:
+    X = jax.random.normal(jax.random.PRNGKey(7), (n_points, d))
+    X = X / jnp.linalg.norm(X, axis=1, keepdims=True) * 0.8
+    K = np.asarray(kern.gram(X))
+    est = np.asarray(fm.estimate_gram(X))
+    return float(np.sqrt(np.mean((est - K) ** 2)))
+
+
+def run(interpret: bool = False, quick: bool = False, repeats: int = 5):
+    on_tpu = jax.default_backend() == "tpu"
+    configs = _QUICK_CONFIGS if quick else _CONFIGS
+    results = {}
+    for label, kern, d, F, batch in configs:
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, d)) * 0.2
+        entry = {"d": d, "F": F, "batch": batch}
+        for est in ("rm", "tensor_sketch"):
+            fm = make_feature_map(kern, d, F, jax.random.PRNGKey(0),
+                                  estimator=est, measure="proportional")
+            paths = {
+                "fused": jax.jit(lambda xx, f=fm: f.apply(
+                    xx, use_pallas=True, interpret=interpret or not on_tpu)),
+                "jnp": jax.jit(lambda xx, f=fm: f.apply(
+                    xx, use_pallas=False)),
+            }
+            for path, fn in paths.items():
+                us = _time_call(fn, x, repeats=repeats)
+                feats_per_s = batch * fm.output_dim / (us * 1e-6)
+                entry[f"{est}_{path}_us"] = us
+                entry[f"{est}_{path}_feats_per_s"] = feats_per_s
+                yield f"sketch/{label}/{est}/{path},{us:.1f},{feats_per_s:.3e}"
+            entry[f"{est}_output_dim"] = fm.output_dim
+            entry[f"{est}_gram_rmse"] = _gram_rmse(fm, kern, d)
+            yield (f"sketch/{label}/{est}/gram_rmse,"
+                   f"{entry[f'{est}_gram_rmse']:.5f}")
+        entry["ts_vs_rm_jnp_speedup"] = (
+            entry["rm_jnp_us"] / entry["tensor_sketch_jnp_us"]
+        )
+        results[label] = entry
+        yield (f"sketch/{label}/ts_vs_rm_jnp_speedup,"
+               f"{entry['ts_vs_rm_jnp_speedup']:.3f}")
+
+    out = Path(__file__).resolve().parent.parent / "BENCH_sketch.json"
+    out.write_text(json.dumps(
+        {"backend": jax.default_backend(), "interpret": interpret,
+         "quick": quick, "results": results}, indent=2
+    ))
+    yield f"wrote {out}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the Pallas paths in interpret mode (CPU CI)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small configs / fewer repeats (CI smoke)")
+    args = ap.parse_args()
+    for row in run(interpret=args.interpret, quick=args.quick,
+                   repeats=2 if args.quick else 5):
+        print(row)

@@ -32,7 +32,14 @@ def list_archs() -> List[str]:
 
 
 def get_config(arch: str, smoke: bool = False,
-               attention_mode: str | None = None) -> ModelConfig:
+               attention_mode: str | None = None,
+               estimator: str | None = None) -> ModelConfig:
+    """Resolve an arch id, with optional attention-mode / estimator overrides.
+
+    ``estimator`` picks the linear-attention feature family by registry name
+    ("rm" / "tensor_sketch"); it only applies to ``attention_mode="rm"``
+    models and is validated against the estimator registry.
+    """
     if arch not in _ARCH_MODULES:
         raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
     mod = importlib.import_module(_ARCH_MODULES[arch])
@@ -44,6 +51,21 @@ def get_config(arch: str, smoke: bool = False,
                 "does not apply (DESIGN.md §6)."
             )
         cfg = dataclasses.replace(cfg, attention_mode=attention_mode)
+    if estimator is not None:
+        if cfg.attention_mode != "rm":
+            raise ValueError(
+                f"estimator={estimator!r} requested but {arch} resolves to "
+                f"attention_mode={cfg.attention_mode!r}; estimators only "
+                "apply to the paper's RM linear attention (pass "
+                "attention_mode='rm')."
+            )
+        from repro.core import registry
+
+        registry.get(estimator)  # raises with the available-name list
+        if estimator != cfg.rm.estimator:
+            cfg = dataclasses.replace(
+                cfg, rm=dataclasses.replace(cfg.rm, estimator=estimator)
+            )
     return cfg.validate()
 
 

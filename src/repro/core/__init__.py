@@ -1,5 +1,10 @@
 """The paper's contribution: Random Maclaurin feature maps for dot product
-kernels (Kar & Karnick, AISTATS 2012), as composable JAX modules."""
+kernels (Kar & Karnick, AISTATS 2012), as composable JAX modules.
+
+``repro.core.registry`` holds the pluggable estimator registry ("rm",
+"tensor_sketch", ...); every entry shares the Taylor-coefficient degree
+measure pipeline defined here."""
+from repro.core import registry
 from repro.core.maclaurin import (
     DotProductKernel,
     ExponentialDotProductKernel,
@@ -43,6 +48,7 @@ from repro.core.linear_models import (
 )
 
 __all__ = [
+    "registry",
     "FeaturePlan",
     "allocate_features",
     "apply_plan",

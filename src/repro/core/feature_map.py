@@ -184,11 +184,44 @@ class RMFeatureMap:
             use_pallas=False,
         )
 
+    def apply(
+        self,
+        x: jax.Array,
+        *,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        accum_dtype=jnp.float32,
+    ) -> jax.Array:
+        """Backend-routed fused path (ONE Pallas launch on TPU)."""
+        return apply_plan(
+            self.plan, self.omegas, x, accum_dtype=accum_dtype,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
     # Convenience: the linear-kernel estimate of K.
-    def estimate_gram(self, X: jax.Array, Y: Optional[jax.Array] = None):
-        zx = self(X)
-        zy = zx if Y is None else self(Y)
-        return zx @ zy.T
+    def estimate_gram(
+        self,
+        X: jax.Array,
+        Y: Optional[jax.Array] = None,
+        *,
+        row_chunk: int = 4096,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+    ) -> jax.Array:
+        """Kernel-matrix estimate through the fused ``apply_plan`` path.
+
+        Featurization is chunked over rows so the fused launch's padded
+        tiles (and the flat [rows, total_rows] projection on the jnp path)
+        stay bounded — Gram estimation on 50k-point datasets runs in
+        ``row_chunk``-row slices instead of one giant intermediate.
+        """
+        from repro.core.registry import estimate_gram
+
+        return estimate_gram(
+            lambda Z: self.apply(Z, use_pallas=use_pallas,
+                                 interpret=interpret),
+            X, Y, row_chunk=row_chunk,
+        )
 
 
 def make_feature_map(
@@ -204,8 +237,15 @@ def make_feature_map(
     radius: float = 1.0,
     omega_dtype=jnp.float32,
     stratified: bool = True,
-) -> RMFeatureMap:
-    """Build an ``RMFeatureMap`` (Algorithm 1 / §6.1 H0/1 / beyond-paper measures).
+    estimator: str = "rm",
+):
+    """Build a feature map (Algorithm 1 / §6.1 H0/1 / beyond-paper measures).
+
+    ``estimator`` selects the random-feature family from the estimator
+    registry (``repro.core.registry``): ``"rm"`` (default) returns an
+    ``RMFeatureMap``; any other name (e.g. ``"tensor_sketch"``) delegates to
+    that entry's ``make_map`` with the same kwargs — all families share the
+    degree-measure machinery, so downstream code is estimator-agnostic.
 
     Two allocation modes (see ``core.plan.allocate_features``):
 
@@ -219,6 +259,14 @@ def make_feature_map(
       truncated construction when q is the ``proportional`` measure). The
       dropped-degree mass is reported by ``RMFeatureMap.truncation_bias``.
     """
+    if estimator != "rm":
+        from repro.core import registry
+
+        return registry.get(estimator).make_map(
+            kernel, input_dim, num_features, key,
+            p=p, measure=measure, h01=h01, n_max=n_max, radius=radius,
+            omega_dtype=omega_dtype, stratified=stratified,
+        )
     key_deg, key_omega = jax.random.split(key)
     seed = 0
     if not stratified:

@@ -141,18 +141,25 @@ def train_featurized_linear(
     n_iters: int = 20,
     use_pallas: Optional[bool] = None,
 ) -> Classifier:
-    """Paper pipeline in one call: featurize with an RM map, fit linear.
+    """Paper pipeline in one call: featurize with a feature map, fit linear.
 
-    ``fmap`` is an ``RMFeatureMap`` (or anything exposing ``plan``/``omegas``);
-    train-time and decision-time featurization both run through the fused
-    single-launch path (``core.plan.apply_plan``), so the returned
-    ``Classifier.decision`` accepts RAW inputs, not features.
+    ``fmap`` is any registry estimator's map object (``RMFeatureMap``,
+    ``SketchFeatureMap``, or anything exposing ``apply``; legacy
+    ``plan``/``omegas`` carriers still work); train-time and decision-time
+    featurization both run through the fused single-launch path, so the
+    returned ``Classifier.decision`` accepts RAW inputs, not features.
     """
-    from repro.core.plan import apply_plan
+    if hasattr(fmap, "apply"):
+        def featurize(Z):
+            return fmap.apply(jnp.asarray(Z, jnp.float32),
+                              use_pallas=use_pallas)
+    else:
+        from repro.core.plan import apply_plan
 
-    def featurize(Z):
-        return apply_plan(fmap.plan, fmap.omegas, jnp.asarray(Z, jnp.float32),
-                          use_pallas=use_pallas)
+        def featurize(Z):
+            return apply_plan(fmap.plan, fmap.omegas,
+                              jnp.asarray(Z, jnp.float32),
+                              use_pallas=use_pallas)
 
     base = train_linear(featurize(X), y, lam=lam, loss=loss, n_iters=n_iters)
     return Classifier(decision_fn=lambda Z: base.decision(featurize(Z)))

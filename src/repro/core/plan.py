@@ -46,6 +46,29 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
+# plan serialization (shared with SketchPlan — repro.sketch.plan)
+# ---------------------------------------------------------------------------
+_PLAN_TUPLE_FIELDS = ("degrees", "counts", "scales", "coefs_host")
+
+
+def plan_to_json(plan) -> str:
+    """Any plan NamedTuple -> JSON carrying every field (cross-host repro)."""
+    import json
+
+    return json.dumps({f: getattr(plan, f) for f in plan._fields})
+
+
+def plan_from_json(cls, s: str):
+    import json
+
+    d = json.loads(s)
+    for f in _PLAN_TUPLE_FIELDS:
+        if f in d:
+            d[f] = tuple(d[f])
+    return cls(**d)
+
+
+# ---------------------------------------------------------------------------
 # allocation (shared by Algorithm 1, static plans, and Algorithm 2)
 # ---------------------------------------------------------------------------
 def allocate_features(
@@ -66,6 +89,9 @@ def allocate_features(
       construction under the proportional measure.
     * ``stratified=False`` — paper-faithful Algorithm 1: iid draws ``N ~ q``
       with importance weights ``sqrt(a_n / q_n) / sqrt(D)``; exactly unbiased.
+      The draws come from a fresh ``Philox(seed)`` generator each call, so
+      identical seeds give identical allocations; ``make_feature_plan``
+      records both the seed and the realized counts on the ``FeaturePlan``.
 
     ``scales[n]`` is 0 where ``counts[n] == 0``.
     """
@@ -99,7 +125,10 @@ class FeaturePlan(NamedTuple):
     ``degrees``/``counts``/``scales`` describe the degree >= 1 random buckets
     (ascending). ``const`` is the collapsed degree-0 column value (0.0 when
     absent). The H0/1 variant (paper §6.1) prepends an exact
-    ``[sqrt(a_0), sqrt(a_1) x]`` block.
+    ``[sqrt(a_0), sqrt(a_1) x]`` block. ``seed`` records the
+    ``allocate_features`` seed alongside the realized allocation (counts), so
+    iid-mode plans are reproducible across hosts: the plan's repr and
+    ``to_json`` carry everything needed to rebuild identical column layouts.
     """
 
     degrees: Tuple[int, ...]
@@ -112,6 +141,7 @@ class FeaturePlan(NamedTuple):
     input_dim: int
     num_random: int                   # D, the random-feature budget
     coefs_host: Tuple[float, ...]     # a_0..a_{n_max} for diagnostics
+    seed: int                         # degree-allocation seed (reproducibility)
 
     # -- sizes ---------------------------------------------------------------
     @property
@@ -181,6 +211,15 @@ class FeaturePlan(NamedTuple):
                 bias += a_n * radius ** (2 * n)
         return bias
 
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> str:
+        """Full plan state (seed + realized allocation included) as JSON."""
+        return plan_to_json(self)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FeaturePlan":
+        return plan_from_json(cls, s)
+
 
 def make_feature_plan(
     kernel: DotProductKernel,
@@ -248,6 +287,7 @@ def make_feature_plan(
         input_dim=input_dim,
         num_random=num_features,
         coefs_host=tuple(float(c) for c in coefs),
+        seed=seed,
     )
 
 

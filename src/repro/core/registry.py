@@ -1,0 +1,185 @@
+"""Estimator registry — pluggable random-feature estimators behind one name.
+
+Every estimator family in the repo (Random Maclaurin, TensorSketch, future
+entries) is a set of five functions sharing one protocol, keyed by name:
+
+    make_plan(kernel, input_dim, num_features, *, p, measure, h01, n_max,
+              radius, stratified, seed)        -> plan   (hashable, jit-static)
+    init_params(plan, key, dtype=float32)      -> Dict[str, jax.Array]
+    apply(plan, params, x, *, accum_dtype, use_pallas, interpret) -> features
+    output_dim(plan)                           -> int
+    truncation_bias(plan, radius)              -> float
+
+Consumers — ``make_feature_map``, RM attention (``models/attention.py`` /
+``models/mla.py``), the serving engine, benchmarks — resolve
+``registry.get(name)`` and never special-case on the estimator: the same
+Taylor-coefficient degree measure drives either family, params are an opaque
+pytree the consumer stores, and ``plan.output_dim`` fixes downstream shapes.
+
+Built-in entries are registered lazily: ``get(name)`` calls that entry's
+factory on first use, and each factory imports only its own family's
+modules — ``repro.core`` never imports the sketch subsystem unless
+"tensor_sketch" is actually requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Estimator",
+    "register",
+    "get",
+    "available",
+    "featurize_chunked",
+    "estimate_gram",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimator:
+    """One estimator family. ``make_map`` builds the convenience map object
+    (``RMFeatureMap`` / ``SketchFeatureMap``) used by offline consumers."""
+
+    name: str
+    make_plan: Callable[..., Any]
+    init_params: Callable[..., Dict[str, jax.Array]]
+    apply: Callable[..., jax.Array]
+    make_map: Callable[..., Any]
+    output_dim: Callable[[Any], int]
+    truncation_bias: Callable[[Any, float], float]
+
+
+_REGISTRY: Dict[str, Estimator] = {}
+
+# name -> factory building the entry on first get(); each factory imports
+# only its own family's modules, so RM-only consumers never pay the sketch
+# subsystem import (and vice versa).
+_BUILTIN_FACTORIES: Dict[str, Callable[[], Estimator]] = {}
+
+
+def register(entry: Estimator) -> Estimator:
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get(name: str) -> Estimator:
+    if name not in _REGISTRY and name in _BUILTIN_FACTORIES:
+        register(_BUILTIN_FACTORIES[name]())
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown estimator {name!r}; available: {available()}"
+        )
+    return _REGISTRY[name]
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(set(_REGISTRY) | set(_BUILTIN_FACTORIES)))
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+def featurize_chunked(
+    apply_fn: Callable[[jax.Array], jax.Array],
+    X: jax.Array,
+    row_chunk: int = 4096,
+) -> jax.Array:
+    """Apply a feature map over row chunks of ``X [N, d]``.
+
+    Bounds the live intermediate (the fused launch's padded tiles / the flat
+    projection) to ``row_chunk`` rows, so Gram estimation on 50k-point
+    datasets never materializes an [N, total_rows] scratch. Chunk boundaries
+    are static python slices — shapes stay jit-friendly.
+    """
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    if n <= row_chunk:
+        return apply_fn(X)
+    parts = [apply_fn(X[i : i + row_chunk]) for i in range(0, n, row_chunk)]
+    return jnp.concatenate(parts, axis=0)
+
+
+def estimate_gram(
+    apply_fn: Callable[[jax.Array], jax.Array],
+    X: jax.Array,
+    Y=None,
+    row_chunk: int = 4096,
+) -> jax.Array:
+    """Kernel-matrix estimate ``Z(X) Z(Y)^T`` via chunked featurization.
+
+    The shared body behind ``RMFeatureMap.estimate_gram`` and
+    ``SketchFeatureMap.estimate_gram``.
+    """
+    zx = featurize_chunked(apply_fn, X, row_chunk=row_chunk)
+    zy = zx if Y is None else featurize_chunked(apply_fn, Y,
+                                                row_chunk=row_chunk)
+    return zx @ zy.T
+
+
+# ---------------------------------------------------------------------------
+# built-in entries
+# ---------------------------------------------------------------------------
+def _rm_init_params(plan, key, dtype=jnp.float32):
+    from repro.core.plan import init_omegas
+
+    return {"omegas": init_omegas(plan, key, dtype)}
+
+
+def _rm_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
+              interpret=None):
+    from repro.core.plan import apply_plan
+
+    return apply_plan(plan, params["omegas"], x, accum_dtype=accum_dtype,
+                      use_pallas=use_pallas, interpret=interpret)
+
+
+def _ts_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
+              interpret=None):
+    # Like the RM path's per-scan-step pack_omegas, the frequency-domain
+    # pack re-runs per call here (hash tables are the stored params — exact
+    # in any dtype, where pre-packed cos/sin tensors would be degraded by
+    # the bf16 compute cast). Callers outside a layer scan can cache via
+    # apply_sketch_plan(packed=...); storing pre-packed params is the same
+    # remaining headroom DESIGN.md §3 notes for RM.
+    from repro.sketch.plan import apply_sketch_plan
+
+    return apply_sketch_plan(plan, params, x, accum_dtype=accum_dtype,
+                             use_pallas=use_pallas, interpret=interpret)
+
+
+def _make_rm_entry() -> Estimator:
+    from repro.core.feature_map import make_feature_map
+    from repro.core.plan import make_feature_plan
+
+    return Estimator(
+        name="rm",
+        make_plan=make_feature_plan,
+        init_params=_rm_init_params,
+        apply=_rm_apply,
+        make_map=make_feature_map,
+        output_dim=lambda plan: plan.output_dim,
+        truncation_bias=lambda plan, radius: plan.truncation_bias(radius),
+    )
+
+
+def _make_ts_entry() -> Estimator:
+    from repro.sketch.feature_map import make_sketch_feature_map
+    from repro.sketch.plan import init_sketch_params, make_sketch_plan
+
+    return Estimator(
+        name="tensor_sketch",
+        make_plan=make_sketch_plan,
+        init_params=init_sketch_params,
+        apply=_ts_apply,
+        make_map=make_sketch_feature_map,
+        output_dim=lambda plan: plan.output_dim,
+        truncation_bias=lambda plan, radius: plan.truncation_bias(radius),
+    )
+
+
+_BUILTIN_FACTORIES["rm"] = _make_rm_entry
+_BUILTIN_FACTORIES["tensor_sketch"] = _make_ts_entry

@@ -162,8 +162,12 @@ _PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
     "gn_scale": (None,),
     "ff_up": ("fsdp", "ffn"),
     "ff_down": ("ffn", "fsdp"),
-    # rm plan omegas: replicated (small)
+    # estimator params ("rm_est" subtree): replicated (small, frozen).
+    # "omegas" = RM Rademacher rows; "h"/"s" = TensorSketch hash tables.
     "rm_omegas": (None, None),
+    "omegas": (None, None),
+    "h": (None, None),
+    "s": (None, None),
     "rm_scale": (),
     # norms
     "scale": (None,),

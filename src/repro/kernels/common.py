@@ -1,0 +1,13 @@
+"""Shared tiling helpers for the Pallas kernel wrappers.
+
+One VMEM working-set budget for every kernel family, so a budget tune lands
+everywhere at once. v5e has ~128MiB of VMEM per core; we budget well under
+it to leave room for double buffering.
+"""
+from __future__ import annotations
+
+VMEM_BUDGET = 12 * 1024 * 1024  # bytes
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

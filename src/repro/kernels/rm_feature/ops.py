@@ -23,13 +23,8 @@ from repro.kernels.rm_feature.rm_feature import (
     rm_feature_fused_pallas,
 )
 
-# Conservative per-core VMEM working-set budget (bytes). v5e has ~128MiB of
-# VMEM per core; we budget well under it to leave room for double buffering.
-_VMEM_BUDGET = 12 * 1024 * 1024
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+from repro.kernels.common import VMEM_BUDGET as _VMEM_BUDGET
+from repro.kernels.common import round_up as _round_up
 
 
 def _pick_blocks(d: int, degree: int, b: int, f: int) -> tuple[int, int]:

@@ -1,0 +1,4 @@
+from repro.kernels.tensor_sketch.ops import tensor_sketch_fused
+from repro.kernels.tensor_sketch.tensor_sketch import tensor_sketch_fused_pallas
+
+__all__ = ["tensor_sketch_fused", "tensor_sketch_fused_pallas"]

@@ -1,0 +1,79 @@
+"""jit'd public wrapper around the fused TensorSketch Pallas kernel.
+
+``tensor_sketch_fused`` applies the whole sketch-block section of a
+``SketchPlan`` (packed frequency-domain layout, ``repro.sketch.plan
+.pack_sketch``) in one Pallas launch: it pads the batch to a VMEM-budgeted
+tile and the feature axis to lane alignment, and falls back to the pure-jnp
+mirror (``repro.sketch.ref.tensor_sketch_fused_ref``) when Pallas is off or
+the plan has no sketch blocks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import VMEM_BUDGET as _VMEM_BUDGET
+from repro.kernels.common import round_up as _round_up
+from repro.sketch.ref import tensor_sketch_fused_ref
+from repro.kernels.tensor_sketch.tensor_sketch import tensor_sketch_fused_pallas
+
+
+def _pick_block_b(d: int, k: int, fs: int, b: int) -> int:
+    """Largest batch tile whose working set fits the VMEM budget.
+
+    Working set: x tile + both packed weight tensors + both inverse-DFT
+    matrices + three [bm, Fs] live accumulators (out, ar/ai).
+    """
+    fixed = 4 * (2 * k * fs * d + 2 * fs * fs)
+    for bm in (512, 256, 128, 64, 32, 16, 8):
+        if bm > max(b, 8) * 2:
+            continue
+        if fixed + 4 * bm * (d + 3 * fs) <= _VMEM_BUDGET:
+            return bm
+    return 8
+
+
+def tensor_sketch_fused(
+    x: jax.Array,          # [..., d]
+    wr: jax.Array,         # [max_degree, Fs, d]   (pack_sketch)
+    wi: jax.Array,         # [max_degree, Fs, d]
+    col_deg: jax.Array,    # [Fs] int32 per-column product depth
+    mr: jax.Array,         # [Fs, Fs] block-diag inverse-DFT, real
+    mi: jax.Array,         # [Fs, Fs] block-diag inverse-DFT, imag
+    col_scale: jax.Array,  # [Fs] per-column scale
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:            # [..., Fs] float32
+    """Apply the packed sketch blocks: one Pallas launch for every column."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch_shape = x.shape[:-1]
+    d = x.shape[-1]
+    k, fs, _ = wr.shape
+    xf = x.reshape(-1, d)
+    if not use_pallas or k == 0 or fs == 0:
+        out = tensor_sketch_fused_ref(xf, wr, wi, col_deg, mr, mi, col_scale)
+        return out.reshape(*batch_shape, fs)
+
+    b = xf.shape[0]
+    f_pad = _round_up(max(fs, 128), 128)
+    bm = _pick_block_b(d, k, f_pad, b)   # budget at the PADDED feature count
+    b_pad = _round_up(max(b, bm), bm)
+    xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
+    pf = f_pad - fs
+    wrp = jnp.pad(wr, ((0, 0), (0, pf), (0, 0)))
+    wip = jnp.pad(wi, ((0, 0), (0, pf), (0, 0)))
+    # padded columns: depth 0 keeps the accumulator at (1, 0); zero inverse-DFT
+    # rows and zero scales make their outputs exactly 0 before the slice.
+    deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, pf),))
+    mrp = jnp.pad(mr, ((0, pf), (0, pf)))
+    mip = jnp.pad(mi, ((0, pf), (0, pf)))
+    scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, pf),))
+    out = tensor_sketch_fused_pallas(
+        xp, wrp, wip, deg_p, mrp, mip, scale_p,
+        block_b=bm, interpret=interpret,
+    )
+    return out[:b, :fs].reshape(*batch_shape, fs)

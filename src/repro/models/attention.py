@@ -19,8 +19,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.core.maclaurin import ExponentialDotProductKernel
-from repro.core.plan import FeaturePlan, apply_plan, init_omegas, make_feature_plan
 from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_decode_step,
@@ -36,12 +36,18 @@ NEG_INF = -1e30
 
 
 # ---------------------------------------------------------------------------
-# RM plan (shared helper)
+# feature plan (shared helpers; estimator resolved from the registry)
 # ---------------------------------------------------------------------------
-def rm_plan_for(cfg: ModelConfig, input_dim: int) -> FeaturePlan:
+def rm_estimator(cfg: ModelConfig) -> registry.Estimator:
+    """The config's feature-estimator entry ("rm", "tensor_sketch", ...)."""
+    return registry.get(cfg.rm.estimator)
+
+
+def rm_plan_for(cfg: ModelConfig, input_dim: int):
+    """Build the (estimator-specific, hashable) plan at trace time."""
     rm = cfg.rm
     kernel = ExponentialDotProductKernel(rm.sigma2)
-    return make_feature_plan(
+    return rm_estimator(cfg).make_plan(
         kernel,
         input_dim,
         rm.num_features,
@@ -66,9 +72,14 @@ def rm_valid_mask(z: jax.Array, positions: jax.Array) -> jax.Array:
 
 
 def _rm_featurize(
-    params: Params, cfg: ModelConfig, meta: FeaturePlan, x: jax.Array
+    params: Params, cfg: ModelConfig, meta, x: jax.Array
 ) -> jax.Array:
-    """[B, T, H, dh] -> [B, H, T, F]: l2-normalize, scale, featurize."""
+    """[B, T, H, dh] -> [B, H, T, F]: l2-normalize, scale, featurize.
+
+    ``meta`` is the estimator-specific plan from ``rm_plan_for``; the actual
+    application is dispatched through the registry entry named by
+    ``cfg.rm.estimator``, whose params live under ``params["rm_est"]``.
+    """
     xf = x.astype(jnp.float32)
     norm = jnp.linalg.norm(xf, axis=-1, keepdims=True)
     xhat = xf / jnp.maximum(norm, 1e-6)
@@ -76,7 +87,7 @@ def _rm_featurize(
         scale = jax.nn.softplus(params["rm_scale"]).astype(jnp.float32)
     else:
         scale = jnp.float32(cfg.rm.qk_scale)
-    z = apply_plan(meta, params["rm_omegas"], xhat * scale)
+    z = rm_estimator(cfg).apply(meta, params["rm_est"], xhat * scale)
     return jnp.transpose(z, (0, 2, 1, 3))  # [B, H, T, F]
 
 
@@ -103,7 +114,7 @@ def init_attention(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
         params["k_norm_scale"] = jnp.ones((dh,), dtype)
     if cfg.attention_mode == "rm":
         meta = rm_plan_for(cfg, dh)
-        params["rm_omegas"] = init_omegas(meta, ks[4])
+        params["rm_est"] = rm_estimator(cfg).init_params(meta, ks[4])
         if cfg.rm.learnable_scale:
             # softplus^-1(qk_scale)
             params["rm_scale"] = jnp.asarray(

@@ -25,12 +25,16 @@ class RMAttentionConfig:
     """The paper's technique as an attention mode (DESIGN.md §2).
 
     q/k are l2-normalized per head, scaled by ``qk_scale`` and mapped through
-    a Random-Maclaurin plan for exp(<q,k>/sigma2); attention becomes linear in
-    the features. ``measure='proportional', stratified=True`` is the
-    beyond-paper low-variance default; ``measure='geometric',
-    stratified=False`` is the paper-faithful Algorithm 1 sampler.
+    a feature plan for exp(<q,k>/sigma2); attention becomes linear in the
+    features. ``measure='proportional', stratified=True`` is the beyond-paper
+    low-variance default; ``measure='geometric', stratified=False`` is the
+    paper-faithful Algorithm 1 sampler. ``estimator`` names the feature
+    family in the estimator registry (``repro.core.registry``): ``"rm"``
+    (Random Maclaurin, default) or ``"tensor_sketch"`` (CountSketch + FFT);
+    both are driven by the same Taylor-coefficient measure.
     """
 
+    estimator: str = "rm"
     num_features: int = 256
     sigma2: float = 1.0
     qk_scale: float = 1.0

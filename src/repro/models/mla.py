@@ -13,13 +13,18 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import apply_plan, init_omegas
 from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_decode_step,
     rm_attention_prefill_final_state,
 )
-from repro.models.attention import NEG_INF, rm_plan_for, rm_valid_mask, _rm_featurize
+from repro.models.attention import (
+    NEG_INF,
+    rm_estimator,
+    rm_plan_for,
+    rm_valid_mask,
+    _rm_featurize,
+)
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, normal_init
 
@@ -44,7 +49,7 @@ def init_mla(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
     }
     if cfg.attention_mode == "rm":
         meta = rm_plan_for(cfg, qk_dim)
-        params["rm_omegas"] = init_omegas(meta, ks[4])
+        params["rm_est"] = rm_estimator(cfg).init_params(meta, ks[4])
         if cfg.rm.learnable_scale:
             params["rm_scale"] = jnp.asarray(
                 math.log(math.expm1(cfg.rm.qk_scale)), dtype=jnp.float32

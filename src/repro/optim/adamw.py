@@ -15,8 +15,11 @@ import jax.numpy as jnp
 from repro.common.tree import tree_map_with_path
 
 # parameter names that must never be updated (static draws of the paper's
-# feature maps are part of the model DEFINITION, not learnable weights)
+# feature maps are part of the model DEFINITION, not learnable weights).
+# "rm_est" is the estimator-registry param subtree (RM omegas, TensorSketch
+# hash tables — the latter are int32 and must never see an optimizer step).
 FROZEN_LEAF_NAMES = ("rm_omegas",)
+FROZEN_SUBTREES = ("rm_est",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +34,9 @@ class AdamWConfig:
 
 
 def _is_frozen(path: Tuple[str, ...]) -> bool:
-    return path[-1] in FROZEN_LEAF_NAMES
+    return path[-1] in FROZEN_LEAF_NAMES or any(
+        p in FROZEN_SUBTREES for p in path
+    )
 
 
 def adamw_init(params: Any) -> Dict[str, Any]:

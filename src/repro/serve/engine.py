@@ -76,6 +76,15 @@ class ServingEngine:
         if not cfg.causal:
             raise ValueError("encoder-only models cannot be served "
                              "autoregressively")
+        # Resolve the feature-estimator entry up front: a bad estimator name
+        # should fail at engine construction with the registry's name list,
+        # not deep inside the first jitted prefill. RM/sketch lane state is
+        # O(1) either way (plan.output_dim fixes the state shapes).
+        self.estimator = None
+        if cfg.attention_mode == "rm":
+            from repro.core import registry
+
+            self.estimator = registry.get(cfg.rm.estimator).name
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots

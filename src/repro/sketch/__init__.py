@@ -1,0 +1,34 @@
+"""repro.sketch — the TensorSketch estimator subsystem (DESIGN.md §9).
+
+A second random-feature family for the paper's dot-product kernels, driven by
+the SAME Taylor-coefficient degree measures as Random Maclaurin but built
+from CountSketch composition + FFT (Pham & Pagh) instead of Rademacher
+products. Registered as ``"tensor_sketch"`` in the estimator registry
+(``repro.core.registry``); consumers pick estimators by name.
+"""
+from repro.sketch.plan import (
+    SketchPlan,
+    apply_sketch_plan,
+    init_sketch_params,
+    make_sketch_plan,
+    pack_sketch,
+)
+from repro.sketch.feature_map import SketchFeatureMap, make_sketch_feature_map
+from repro.sketch.ref import (
+    count_sketch_ref,
+    tensor_sketch_blocks_ref,
+    tensor_sketch_fused_ref,
+)
+
+__all__ = [
+    "SketchPlan",
+    "apply_sketch_plan",
+    "init_sketch_params",
+    "make_sketch_plan",
+    "pack_sketch",
+    "SketchFeatureMap",
+    "make_sketch_feature_map",
+    "count_sketch_ref",
+    "tensor_sketch_blocks_ref",
+    "tensor_sketch_fused_ref",
+]

@@ -1,0 +1,123 @@
+"""SketchFeatureMap — a materialized TensorSketch feature map.
+
+The TensorSketch counterpart of ``core.feature_map.RMFeatureMap``: a thin
+carrier of (``plan``, ``params``) with the same duck-typed surface
+(``__call__`` / ``apply`` / ``output_dim`` / ``estimate_gram`` /
+``truncation_bias``), so every downstream consumer — ``train_featurized_
+linear``, benchmarks, examples — takes either map without special-casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maclaurin import DotProductKernel
+from repro.sketch.plan import (
+    SketchPlan,
+    apply_sketch_plan,
+    init_sketch_params,
+    make_sketch_plan,
+)
+
+__all__ = ["SketchFeatureMap", "make_sketch_feature_map"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SketchFeatureMap:
+    """(plan, hash tensors) pair; rides through jit/pjit closures."""
+
+    plan: SketchPlan
+    params: Dict[str, jax.Array]      # {"h": [num_funcs, d], "s": [num_funcs, d]}
+
+    # -- pytree plumbing ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.params,), (self.plan,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (params,) = children
+        (plan,) = aux
+        return cls(plan=plan, params=params)
+
+    # -- metadata -------------------------------------------------------------
+    @property
+    def input_dim(self) -> int:
+        return self.plan.input_dim
+
+    @property
+    def num_random(self) -> int:
+        return self.plan.num_random
+
+    @property
+    def output_dim(self) -> int:
+        return self.plan.output_dim
+
+    def truncation_bias(self, radius: float) -> float:
+        return self.plan.truncation_bias(radius)
+
+    # -- application ----------------------------------------------------------
+    def __call__(self, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+        """Pure-jnp (FFT oracle) path, mirroring ``RMFeatureMap.__call__``."""
+        return apply_sketch_plan(self.plan, self.params, x,
+                                 accum_dtype=accum_dtype, use_pallas=False)
+
+    def apply(
+        self,
+        x: jax.Array,
+        *,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        accum_dtype=jnp.float32,
+    ) -> jax.Array:
+        """Backend-routed path: fused Pallas launch on TPU, FFT oracle off."""
+        return apply_sketch_plan(self.plan, self.params, x,
+                                 accum_dtype=accum_dtype,
+                                 use_pallas=use_pallas, interpret=interpret)
+
+    def estimate_gram(
+        self,
+        X: jax.Array,
+        Y: Optional[jax.Array] = None,
+        *,
+        row_chunk: int = 4096,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+    ) -> jax.Array:
+        """Kernel-matrix estimate via row-chunked fused featurization."""
+        from repro.core.registry import estimate_gram
+
+        return estimate_gram(
+            lambda Z: self.apply(Z, use_pallas=use_pallas,
+                                 interpret=interpret),
+            X, Y, row_chunk=row_chunk,
+        )
+
+
+def make_sketch_feature_map(
+    kernel: DotProductKernel,
+    input_dim: int,
+    num_features: int,
+    key: jax.Array,
+    *,
+    p: float = 2.0,
+    measure: str = "geometric",
+    h01: bool = False,
+    n_max: int = 24,
+    radius: float = 1.0,
+    omega_dtype=jnp.float32,
+    stratified: bool = True,
+    seed: int = 0,
+) -> SketchFeatureMap:
+    """Build a ``SketchFeatureMap`` (same signature as ``make_feature_map``)."""
+    plan = make_sketch_plan(
+        kernel, input_dim, num_features,
+        p=p, measure=measure, h01=h01, n_max=n_max, radius=radius,
+        stratified=stratified, seed=seed,
+    )
+    return SketchFeatureMap(
+        plan=plan, params=init_sketch_params(plan, key, omega_dtype)
+    )

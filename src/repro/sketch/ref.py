@@ -1,0 +1,96 @@
+"""jnp reference paths for the TensorSketch estimator.
+
+Two oracles (DESIGN.md §9):
+
+* ``count_sketch_ref`` / ``tensor_sketch_blocks_ref`` — the textbook
+  O(d + F log F) path: scatter-by-hash CountSketch (``.at[:, h].add``) then
+  ``jnp.fft`` product + inverse. This is what XLA runs in production off-TPU
+  (``apply_sketch_plan(use_pallas=False)``) and the ground truth the fused
+  kernel is checked against.
+* ``tensor_sketch_fused_ref`` — the exact jnp mirror of the Pallas kernel's
+  frequency-domain formulation (complex masked running product + block-diag
+  inverse-DFT matmul) on the packed ``pack_sketch`` tensors. Used for raw
+  array-level parity tests of ``tensor_sketch_fused``.
+
+Both emit the sketch-block section only; the deterministic prefix columns
+(h01 block / degree-0 const) are concatenated by ``apply_sketch_plan``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.plan import SketchPlan
+
+__all__ = [
+    "count_sketch_ref",
+    "tensor_sketch_blocks_ref",
+    "tensor_sketch_fused_ref",
+]
+
+
+def count_sketch_ref(
+    x: jax.Array, h: jax.Array, s: jax.Array, width: int
+) -> jax.Array:
+    """One CountSketch: ``x [B, d] -> [B, width]``.
+
+    ``C(x)[b, m] = sum_{i : h[i] == m} s[i] x[b, i]`` — a scatter-add over
+    hash buckets (duplicate indices accumulate).
+    """
+    vals = x * s[None, :].astype(x.dtype)
+    out = jnp.zeros((x.shape[0], width), x.dtype)
+    return out.at[:, h].add(vals)
+
+
+def tensor_sketch_blocks_ref(
+    plan: SketchPlan, params: Dict[str, jax.Array], x: jax.Array
+) -> jax.Array:
+    """All degree blocks via FFT: ``x [B, d] -> [B, num_sketch_cols]``.
+
+    Degree-n block: ``sqrt(a_n) * real(IFFT(prod_j FFT(C_j x)))`` — the
+    circular convolution of the n CountSketches (Pham & Pagh).
+    """
+    xf = x.astype(jnp.float32)
+    feats = []
+    row = 0
+    for n, c, scale in zip(plan.degrees, plan.counts, plan.scales):
+        prod = jnp.ones((xf.shape[0], c), jnp.complex64)
+        for j in range(n):
+            cs = count_sketch_ref(
+                xf, params["h"][row + j], params["s"][row + j], c
+            )
+            prod = prod * jnp.fft.fft(cs, axis=-1)
+            del cs
+        row += n
+        feats.append(jnp.fft.ifft(prod, axis=-1).real * jnp.float32(scale))
+    if not feats:
+        return jnp.zeros((xf.shape[0], 0), jnp.float32)
+    return jnp.concatenate(feats, axis=-1)
+
+
+def tensor_sketch_fused_ref(
+    x: jax.Array,          # [B, d]
+    wr: jax.Array,         # [max_degree, Fs, d] real part (pack_sketch)
+    wi: jax.Array,         # [max_degree, Fs, d] imag part
+    col_deg: jax.Array,    # [Fs] int32 per-column product depth
+    mr: jax.Array,         # [Fs, Fs] block-diag inverse-DFT, real
+    mi: jax.Array,         # [Fs, Fs] block-diag inverse-DFT, imag
+    col_scale: jax.Array,  # [Fs] per-column scale
+) -> jax.Array:            # [B, Fs] float32
+    """jnp mirror of the fused kernel: complex product + inverse-DFT matmul."""
+    xf = x.astype(jnp.float32)
+    k, fs, _ = wr.shape
+    ar = jnp.ones((xf.shape[0], fs), jnp.float32)
+    ai = jnp.zeros((xf.shape[0], fs), jnp.float32)
+    for j in range(k):
+        pr = xf @ wr[j].astype(jnp.float32).T
+        pi = xf @ wi[j].astype(jnp.float32).T
+        keep = (j < col_deg)[None, :]
+        nr = ar * pr - ai * pi
+        ni = ar * pi + ai * pr
+        ar = jnp.where(keep, nr, ar)
+        ai = jnp.where(keep, ni, ai)
+    z = ar @ mr.astype(jnp.float32).T - ai @ mi.astype(jnp.float32).T
+    return z * col_scale[None, :].astype(jnp.float32)

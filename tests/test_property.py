@@ -118,6 +118,43 @@ def test_int8_quantization_bound(seed, scale):
     assert err.max() <= float(s) / 2 + 1e-6 * scale
 
 
+# ---------------------------------------------------------------------------
+# estimator parity: RM and TensorSketch against the exact kernel Gram
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_estimator_parity_within_eps_bound(seed):
+    """Both registry estimators converge to the exact Gram within the paper's
+    pointwise Hoeffding ε (proportional measure: per-feature bound
+    c = f(R^2), so eps(F, δ) = sqrt(8 c^2 ln(2/δ) / F) — bounds.py), and the
+    residual shrinks with the budget. The F=1024 estimate averages two
+    independent maps so the empirical tail sits well inside the (loose)
+    Hoeffding ε for every seed hypothesis can draw.
+    """
+    kern = ExponentialDotProductKernel(1.0)
+    d, radius = 8, 0.8
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (8, d))
+    X = X / jnp.linalg.norm(X, axis=1, keepdims=True) * radius
+    K = np.asarray(kern.gram(X))
+    c = float(kern.f(radius**2))
+    eps = np.sqrt(8.0 * c**2 * np.log(2.0 / 0.001) / 1024)
+
+    for estimator in ("rm", "tensor_sketch"):
+        errs = {}
+        for F in (128, 1024):
+            grams = []
+            for rep in range(1 if F == 128 else 2):
+                fm = make_feature_map(
+                    kern, d, F, jax.random.PRNGKey(7 * seed + F + 13 * rep),
+                    measure="proportional", estimator=estimator,
+                    radius=radius)
+                grams.append(np.asarray(fm.estimate_gram(X)))
+            errs[F] = np.abs(np.mean(grams, axis=0) - K).max()
+        assert errs[1024] <= eps, (estimator, errs, eps)
+        assert errs[1024] <= errs[128] + eps / 4, (estimator, errs)
+
+
 @settings(**_SETTINGS)
 @given(seed=st.integers(0, 2**20))
 def test_error_feedback_unbiased_over_time(seed):
