@@ -6,21 +6,30 @@ kernel and the accuracy of a linear classifier trained on each feature set —
 the paper's Table-1 pipeline, estimator-swapped with one string.
 
 Run: PYTHONPATH=src python examples/estimator_comparison.py
+
+``--devices N`` forces N host devices and ALSO runs every estimator through
+the sharded execution path (features over the "rm_features" mesh axis,
+Gram via one psum — repro.distributed.estimator), printing the sharded
+Gram RMSE next to the single-device one. On CPU this exercises the same
+code path an accelerator mesh runs.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (
-    ExponentialDotProductKernel,
-    make_feature_map,
-    registry,
-    train_featurized_linear,
-)
-from repro.data.toy import make_classification_dataset
+import argparse
+import os
 
 
-def main():
+def main(devices: int = 0):
+    # heavy imports happen AFTER the XLA device-count flag is set
+    import jax
+    import numpy as np
+
+    from repro.core import (
+        ExponentialDotProductKernel,
+        make_feature_map,
+        registry,
+        train_featurized_linear,
+    )
+    from repro.data.toy import make_classification_dataset
+
     kern = ExponentialDotProductKernel(1.0)
     data = make_classification_dataset("adult", seed=0)
     Xtr, ytr = data["x_train"][:2000], data["y_train"][:2000]
@@ -28,21 +37,51 @@ def main():
     d = Xtr.shape[1]
     F = 512
 
-    K_exact = np.asarray(kern.gram(Xte[:256]))
-    print(f"kernel={kern.name}  d={d}  F={F}")
-    print(f"available estimators: {registry.available()}")
+    mesh = None
+    if devices > 1:
+        if F % devices != 0:
+            raise SystemExit(
+                f"--devices must divide the F={F} feature budget evenly "
+                f"(got {devices}); try 2, 4, 8, ..."
+            )
+        from repro.launch.mesh import make_feature_mesh
 
-    for name in registry.available():
+        mesh = make_feature_mesh(devices)
+
+    K_exact = np.asarray(kern.gram(Xte[:256]))
+    print(f"kernel={kern.name}  d={d}  F={F}  devices={len(jax.devices())}")
+    print(f"available estimators: {registry.list_estimators()}")
+
+    for name in registry.list_estimators():
         fm = make_feature_map(kern, d, F, jax.random.PRNGKey(0),
                               estimator=name, measure="proportional")
         est = np.asarray(fm.estimate_gram(Xte[:256]))
         rmse = float(np.sqrt(np.mean((est - K_exact) ** 2)))
         clf = train_featurized_linear(fm, Xtr, ytr, lam=1e-4, n_iters=15)
         acc = clf.accuracy(Xte, yte)
-        print(f"  {name:>14}: output_dim={fm.output_dim:4d}  "
-              f"gram_rmse={rmse:.4f}  test_acc={acc:.3f}  "
-              f"trunc_bias={fm.truncation_bias(1.0):.2e}")
+        line = (f"  {name:>14}: output_dim={fm.output_dim:4d}  "
+                f"gram_rmse={rmse:.4f}  test_acc={acc:.3f}  "
+                f"trunc_bias={fm.truncation_bias(1.0):.2e}")
+        if mesh is not None:
+            sfm = make_feature_map(kern, d, F, jax.random.PRNGKey(0),
+                                   estimator=name, measure="proportional",
+                                   mesh=mesh)
+            sh = np.asarray(sfm.estimate_gram(Xte[:256]))
+            srmse = float(np.sqrt(np.mean((sh - K_exact) ** 2)))
+            line += (f"  sharded[{sfm.num_shards}x"
+                     f"{sfm.shard_output_dim}]_rmse={srmse:.4f}")
+        print(line)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices and add the sharded-execution "
+                         "comparison (set BEFORE jax initializes)")
+    args = ap.parse_args()
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    main(args.devices)

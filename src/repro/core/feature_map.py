@@ -207,6 +207,7 @@ class RMFeatureMap:
         row_chunk: int = 4096,
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        axis_name: Optional[str] = None,
     ) -> jax.Array:
         """Kernel-matrix estimate through the fused ``apply_plan`` path.
 
@@ -214,13 +215,17 @@ class RMFeatureMap:
         tiles (and the flat [rows, total_rows] projection on the jnp path)
         stay bounded — Gram estimation on 50k-point datasets runs in
         ``row_chunk``-row slices instead of one giant intermediate.
+
+        ``axis_name`` is the sharded-execution hook (DESIGN.md §10): when
+        this map is one feature shard inside a ``shard_map``, the partial
+        Gram is reduced over that mesh axis with a single ``psum``.
         """
         from repro.core.registry import estimate_gram
 
         return estimate_gram(
             lambda Z: self.apply(Z, use_pallas=use_pallas,
                                  interpret=interpret),
-            X, Y, row_chunk=row_chunk,
+            X, Y, row_chunk=row_chunk, axis_name=axis_name,
         )
 
 
@@ -238,6 +243,8 @@ def make_feature_map(
     omega_dtype=jnp.float32,
     stratified: bool = True,
     estimator: str = "rm",
+    mesh=None,
+    num_shards: Optional[int] = None,
 ):
     """Build a feature map (Algorithm 1 / §6.1 H0/1 / beyond-paper measures).
 
@@ -246,6 +253,12 @@ def make_feature_map(
     ``RMFeatureMap``; any other name (e.g. ``"tensor_sketch"``) delegates to
     that entry's ``make_map`` with the same kwargs — all families share the
     degree-measure machinery, so downstream code is estimator-agnostic.
+
+    ``mesh`` / ``num_shards`` switch to the SHARDED construction
+    (``repro.distributed.estimator``): the budget splits over the
+    ``"rm_features"`` mesh axis into per-shard sub-maps whose params are
+    drawn with ``fold_in(key, shard)``; the returned ``ShardedFeatureMap``
+    duck-types this function's output for any registry estimator.
 
     Two allocation modes (see ``core.plan.allocate_features``):
 
@@ -259,6 +272,16 @@ def make_feature_map(
       truncated construction when q is the ``proportional`` measure). The
       dropped-degree mass is reported by ``RMFeatureMap.truncation_bias``.
     """
+    if mesh is not None or num_shards is not None:
+        from repro.distributed.estimator import make_sharded_feature_map
+
+        return make_sharded_feature_map(
+            kernel, input_dim, num_features, key,
+            mesh=mesh, num_shards=num_shards, estimator=estimator,
+            omega_dtype=omega_dtype,
+            p=p, measure=measure, h01=h01, n_max=n_max, radius=radius,
+            stratified=stratified,
+        )
     if estimator != "rm":
         from repro.core import registry
 

@@ -36,6 +36,7 @@ from repro.core.maclaurin import DotProductKernel
 
 __all__ = [
     "FeaturePlan",
+    "BIAS_TAIL_DEGREES",
     "allocate_features",
     "make_feature_plan",
     "init_omegas",
@@ -43,6 +44,14 @@ __all__ = [
     "apply_plan",
     "plan_output_dim",
 ]
+
+# ``coefs_host`` carries this many Taylor coefficients BEYOND n_max so
+# ``truncation_bias`` accounts for the series tail the plan can never
+# allocate (paper §4.2's truncation error), not just in-range degrees that
+# happened to get zero features. With the window fixed, the reported bias is
+# monotonically non-increasing in n_max for decaying-coefficient kernels —
+# the conformance contract tests/test_estimator_conformance.py enforces.
+BIAS_TAIL_DEGREES = 8
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +149,9 @@ class FeaturePlan(NamedTuple):
     h01_a1: float
     input_dim: int
     num_random: int                   # D, the random-feature budget
-    coefs_host: Tuple[float, ...]     # a_0..a_{n_max} for diagnostics
+    # a_0..a_{n_max + BIAS_TAIL_DEGREES}: allocation sees a_0..a_{n_max};
+    # the extra tail window feeds truncation_bias diagnostics only.
+    coefs_host: Tuple[float, ...]
     seed: int                         # degree-allocation seed (reproducibility)
 
     # -- sizes ---------------------------------------------------------------
@@ -199,7 +210,9 @@ class FeaturePlan(NamedTuple):
     # -- diagnostics ---------------------------------------------------------
     def truncation_bias(self, radius: float) -> float:
         """Worst-case dropped-degree mass ``sum a_n R^{2n}`` over degrees with
-        ``a_n > 0`` but no allocated features (paper §4.2)."""
+        ``a_n > 0`` but no allocated features (paper §4.2), including the
+        ``BIAS_TAIL_DEGREES``-wide coefficient window beyond n_max that the
+        plan can never allocate."""
         present = set(self.degrees)
         if self.const != 0.0:
             present.add(0)
@@ -248,6 +261,7 @@ def make_feature_plan(
     q = degree_measure(kernel, n_max, p=p, kind=measure, radius=radius,
                        min_degree=2 if h01 else 0)
     coefs = kernel.coefs(n_max)
+    coefs_diag = kernel.coefs(n_max + BIAS_TAIL_DEGREES)
 
     counts_all, scales_all = allocate_features(
         coefs, q, num_features, stratified=stratified, seed=seed
@@ -286,7 +300,7 @@ def make_feature_plan(
         h01_a1=h01_a1,
         input_dim=input_dim,
         num_random=num_features,
-        coefs_host=tuple(float(c) for c in coefs),
+        coefs_host=tuple(float(c) for c in coefs_diag),
         seed=seed,
     )
 

@@ -24,7 +24,7 @@ modules — ``repro.core`` never imports the sketch subsystem unless
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,7 @@ __all__ = [
     "register",
     "get",
     "available",
+    "list_estimators",
     "featurize_chunked",
     "estimate_gram",
 ]
@@ -76,8 +77,19 @@ def get(name: str) -> Estimator:
     return _REGISTRY[name]
 
 
-def available() -> Tuple[str, ...]:
+def list_estimators() -> Tuple[str, ...]:
+    """Every registered estimator name (builtin factories included).
+
+    The conformance suite (tests/test_estimator_conformance.py) and the
+    sharded execution layer (repro.distributed.estimator) iterate this list:
+    a new registry entry is automatically picked up by both — the conformance
+    contract and the mesh path are part of the protocol, not per-family code.
+    """
     return tuple(sorted(set(_REGISTRY) | set(_BUILTIN_FACTORIES)))
+
+
+# back-compat alias (pre-PR-3 name); list_estimators is canonical
+available = list_estimators
 
 
 # ---------------------------------------------------------------------------
@@ -108,16 +120,25 @@ def estimate_gram(
     X: jax.Array,
     Y=None,
     row_chunk: int = 4096,
+    axis_name: Optional[str] = None,
 ) -> jax.Array:
     """Kernel-matrix estimate ``Z(X) Z(Y)^T`` via chunked featurization.
 
-    The shared body behind ``RMFeatureMap.estimate_gram`` and
-    ``SketchFeatureMap.estimate_gram``.
+    The shared body behind ``RMFeatureMap.estimate_gram``,
+    ``SketchFeatureMap.estimate_gram`` and the sharded execution path
+    (``repro.distributed.estimator``). The embedding makes the kernel
+    LINEAR, so feature-sharded execution needs exactly one collective:
+    when called inside a ``shard_map`` whose shards each hold a slice of
+    the feature columns, pass ``axis_name`` and the partial Gram
+    ``Z_s(X) Z_s(Y)^T`` is reduced with a single ``psum``.
     """
     zx = featurize_chunked(apply_fn, X, row_chunk=row_chunk)
     zy = zx if Y is None else featurize_chunked(apply_fn, Y,
                                                 row_chunk=row_chunk)
-    return zx @ zy.T
+    gram = zx @ zy.T
+    if axis_name is not None:
+        gram = jax.lax.psum(gram, axis_name)
+    return gram
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,17 @@ from repro.distributed.sharding import (
     set_default_rules,
     params_partition_specs,
     batch_partition_specs,
+    estimator_param_specs,
+    shard_map,
     DEFAULT_RULES,
+)
+from repro.distributed.estimator import (
+    FEATURE_AXIS,
+    ShardedFeatureMap,
+    make_sharded_feature_map,
+    shard_init_params,
+    sharded_apply,
+    sharded_estimate_gram,
 )
 
 __all__ = [
@@ -13,5 +23,13 @@ __all__ = [
     "set_default_rules",
     "params_partition_specs",
     "batch_partition_specs",
+    "estimator_param_specs",
+    "shard_map",
     "DEFAULT_RULES",
+    "FEATURE_AXIS",
+    "ShardedFeatureMap",
+    "make_sharded_feature_map",
+    "shard_init_params",
+    "sharded_apply",
+    "sharded_estimate_gram",
 ]

@@ -30,6 +30,33 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # newer jax: public jax.shard_map with check_vma
+    _jax_shard_map = jax.shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _jax_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+except AttributeError:  # pinned jax: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+shard_map.__doc__ = """Version-portable ``shard_map`` (replication checks off).
+
+Every shard_map in the repo (MoE expert parallelism, compressed psum, the
+sharded estimator path) goes through this wrapper so the jax-pin difference
+(``jax.shard_map``/``check_vma`` vs ``jax.experimental.shard_map``/
+``check_rep``) lives in exactly one place."""
+
+# THE feature axis: random-feature columns (and the stacked per-shard
+# estimator params backing them) shard over this name — used as both the
+# logical axis in the rule table below and the mesh axis name of
+# launch.mesh.make_feature_mesh / distributed.estimator.
+FEATURE_AXIS = "rm_features"
+
 # logical axis -> mesh axis (or tuple of mesh axes, or None)
 DEFAULT_RULES: Dict[str, object] = {
     "batch": ("pod", "data"),
@@ -48,7 +75,7 @@ DEFAULT_RULES: Dict[str, object] = {
     "experts": "model",
     "expert_ffn": None,
     "fsdp": "data",        # weight dim sharded for ZeRO-style FSDP
-    "rm_features": None,
+    FEATURE_AXIS: None,    # in-model estimator params replicate (§10)
     "state": "model",
     "layers": None,
     # decode KV-cache sequence dim: None = replicated over model (classic);
@@ -237,6 +264,36 @@ def params_partition_specs(params_tree, mesh: Mesh,
         return _dedupe_spec(spec, tuple(node.shape), mesh)
 
     return _walk((), params_tree)
+
+
+# ---------------------------------------------------------------------------
+# estimator param subtrees
+# ---------------------------------------------------------------------------
+# Two distinct layouts, one per serving regime (DESIGN.md §10):
+#
+#   * REPLICATED — the in-model ``rm_est`` subtree (RM omegas / CountSketch
+#     "h"/"s" hash tensors) during data-parallel decode: small, frozen,
+#     needed in full by every shard. Covered by the name rules above
+#     ("omegas"/"h"/"s" -> replicated).
+#   * FEATURE-SHARDED — the stacked per-shard params of the sharded
+#     estimator construction (repro.distributed.estimator): leaves carry a
+#     leading shard dim that lives on the "rm_features" mesh axis; shard s
+#     owns the s-th sub-map's draws and feature columns.
+def estimator_param_specs(params_stacked, mesh: Mesh,
+                          axis: str = FEATURE_AXIS):
+    """PartitionSpecs for stacked per-shard estimator params.
+
+    Every leaf of ``params_stacked`` has shape ``[num_shards, ...]``; the
+    leading dim is sharded over ``axis`` and everything else is replicated.
+    Leading dims that don't divide the axis size fall back to replicated via
+    ``_dedupe_spec`` (e.g. a host-built stack inspected on one device).
+    """
+
+    def _one(leaf):
+        spec = P(axis, *(None for _ in range(leaf.ndim - 1)))
+        return _dedupe_spec(spec, tuple(leaf.shape), mesh)
+
+    return jax.tree_util.tree_map(_one, params_stacked)
 
 
 # decode-cache leaves, matched by name (rank WITHOUT the scanned-groups dim;

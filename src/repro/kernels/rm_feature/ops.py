@@ -50,13 +50,23 @@ def rm_feature_fused(
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:            # [..., F] float32
-    """Apply a packed feature map: one Pallas launch for every column."""
+    """Apply a packed feature map: one Pallas launch for every column.
+
+    SPMD-safe: no host callbacks and shape-static tiling, so the launch can
+    sit inside a ``shard_map`` body — the sharded estimator path
+    (repro.distributed.estimator) runs one launch per feature shard with the
+    shard's ``[max_degree, F/S, d]`` slice of the packed tensor
+    (tests/dist_scripts/run_sharded_estimators.py checks interpret-mode
+    parity under shard_map).
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     batch_shape = x.shape[:-1]
     d = x.shape[-1]
     k, f, _ = w.shape
     xf = x.reshape(-1, d)
+    if xf.shape[0] == 0:   # degenerate row chunk: skip the padded launch
+        return jnp.zeros((*batch_shape, f), jnp.float32)
     if not use_pallas or k == 0 or f == 0:
         out = rm_feature_fused_ref(xf, w, col_deg, col_scale)
         return out.reshape(*batch_shape, f)

@@ -47,13 +47,22 @@ def tensor_sketch_fused(
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:            # [..., Fs] float32
-    """Apply the packed sketch blocks: one Pallas launch for every column."""
+    """Apply the packed sketch blocks: one Pallas launch for every column.
+
+    SPMD-safe (no host callbacks, shape-static tiling): usable inside a
+    ``shard_map`` body, where the sharded estimator path runs one launch
+    per feature shard over that shard's degree blocks. Note the 128-lane
+    feature pad is a per-LAUNCH cost, so very thin shards (Fs << 128) pay
+    proportionally more padding than a single-device launch would.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     batch_shape = x.shape[:-1]
     d = x.shape[-1]
     k, fs, _ = wr.shape
     xf = x.reshape(-1, d)
+    if xf.shape[0] == 0:   # degenerate row chunk: skip the padded launch
+        return jnp.zeros((*batch_shape, fs), jnp.float32)
     if not use_pallas or k == 0 or fs == 0:
         out = tensor_sketch_fused_ref(xf, wr, wi, col_deg, mr, mi, col_scale)
         return out.reshape(*batch_shape, fs)

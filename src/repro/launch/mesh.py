@@ -4,29 +4,41 @@
 importing this module never touches jax device state — required because the
 dry-run forces 512 host devices via XLA_FLAGS before any jax import, while
 tests/benches must keep seeing 1 device.
+
+Pin compatibility: ``jax.sharding.AxisType`` (explicit/auto axis types) only
+exists on newer jax releases. On pins without it every mesh axis is plain
+(implicitly Auto), which is exactly what ``shard_map``/``pjit`` expect here —
+so the kwarg is dropped rather than emulated.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5-era explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # older pins: meshes are implicitly Auto
+    AxisType = None
 
 
-def _auto(n: int):
-    return (AxisType.Auto,) * n
+def _auto(n: int) -> dict:
+    """axis_types kwargs for ``jax.make_mesh`` (empty on pins without them)."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh for tests/elastic reconfiguration."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -34,4 +46,19 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"), axis_types=_auto(2))
+                         ("data", "model"), **_auto(2))
+
+
+def make_feature_mesh(num_shards: Optional[int] = None):
+    """1-axis mesh whose axis IS the logical feature axis ``"rm_features"``.
+
+    The sharded estimator path (``repro.distributed.estimator``) partitions
+    random-feature columns over this axis: each device owns one shard's
+    params and feature columns, and Gram estimation reduces with a single
+    ``psum``. Defaults to all local devices (8 under
+    ``--xla_force_host_platform_device_count=8``).
+    """
+    from repro.distributed.sharding import FEATURE_AXIS
+
+    n = len(jax.devices()) if num_shards is None else num_shards
+    return jax.make_mesh((n,), (FEATURE_AXIS,), **_auto(1))

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 8 --slots 4
+
+``--estimator`` picks the linear-attention feature family by registry name
+(forwarded to ``get_config``, validated at engine construction);
+``--data-parallel`` builds a host mesh and runs data-parallel decode with
+replicated estimator params (DESIGN.md §10) — pair with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU.
 """
 from __future__ import annotations
 
@@ -16,25 +22,64 @@ from repro.models import init_model
 from repro.serve import Request, ServingEngine
 
 
-def main():
+def make_engine(
+    arch: str,
+    *,
+    smoke: bool = True,
+    attention_mode: str | None = None,
+    estimator: str | None = None,
+    num_slots: int = 4,
+    max_len: int = 128,
+    mesh=None,
+    seed: int = 0,
+) -> ServingEngine:
+    """Config -> params -> engine, with every override forwarded.
+
+    The regression this guards (tests/test_serve_engine.py): ``estimator``
+    must reach ``get_config`` so the engine's up-front registry validation
+    sees the requested family — silently serving the default "rm" estimator
+    under a ``--estimator tensor_sketch`` launch is exactly the conformance
+    drift the registry exists to prevent.
+    """
+    cfg = get_config(arch, smoke=smoke, attention_mode=attention_mode,
+                     estimator=estimator)
+    if not cfg.causal:
+        raise ValueError(f"{arch} is encoder-only; nothing to serve")
+    params = init_model(cfg, jax.random.PRNGKey(seed))
+    return ServingEngine(cfg, params, num_slots=num_slots, max_len=max_len,
+                         mesh=mesh)
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b", choices=list_archs())
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--attention-mode", default=None,
                     choices=[None, "exact", "rm"])
+    ap.add_argument("--estimator", default=None,
+                    help="feature-estimator registry name (rm/tensor_sketch)")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="decode over a host mesh (DP slots, replicated "
+                         "params)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke,
-                     attention_mode=args.attention_mode)
-    if not cfg.causal:
-        raise SystemExit(f"{args.arch} is encoder-only; nothing to serve")
-    params = init_model(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, num_slots=args.slots,
-                           max_len=args.max_len)
+    mesh = None
+    if args.data_parallel:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        print(f"[serve] mesh {dict(mesh.shape)} over {len(jax.devices())} "
+              "devices")
+    engine = make_engine(
+        args.arch, smoke=args.smoke, attention_mode=args.attention_mode,
+        estimator=args.estimator, num_slots=args.slots, max_len=args.max_len,
+        mesh=mesh,
+    )
+    cfg = engine.cfg
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

@@ -217,8 +217,7 @@ def apply_moe(
         return y.reshape(bl, tl, d).astype(x_loc.dtype), aux
 
     moe_params = {k: params[k] for k in in_specs[0]}
-    y, aux = jax.shard_map(
-        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
+    y, aux = shlib.shard_map(
+        local_fn, mesh, in_specs, out_specs,
     )(moe_params, x)
     return y, _finalize_aux(moe, aux)

@@ -72,6 +72,7 @@ class ServingEngine:
         num_slots: int = 4,
         max_len: int = 1024,
         rng_seed: int = 0,
+        mesh: Any = None,
     ):
         if not cfg.causal:
             raise ValueError("encoder-only models cannot be served "
@@ -89,7 +90,32 @@ class ServingEngine:
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
+        self.mesh = mesh
         self.cache = init_decode_cache(cfg, num_slots, max_len)
+        if mesh is not None:
+            # Data-parallel decode: the slot axis of the cache shards over
+            # the DP mesh axes and the params — the frozen ``rm_est``
+            # estimator subtree included — replicate per the name-rule table
+            # (DESIGN.md §10). Decode inputs are committed by jit against
+            # these placements every iteration; slot counts that don't
+            # divide the DP axes fall back to replicated via _dedupe_spec.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.distributed.sharding import (
+                cache_partition_specs,
+                params_partition_specs,
+            )
+
+            def _shardings(specs):
+                return jax.tree_util.tree_map(
+                    lambda sp: NamedSharding(mesh, sp), specs,
+                    is_leaf=lambda sp: isinstance(sp, P))
+
+            self.params = jax.device_put(
+                params, _shardings(params_partition_specs(params, mesh)))
+            self._cache_shardings = _shardings(
+                cache_partition_specs(self.cache, mesh))
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
         self.slots: List[Optional[RequestState]] = [None] * num_slots
         self.queue: List[Request] = []
         self.finished: Dict[int, RequestState] = {}
@@ -188,6 +214,10 @@ class ServingEngine:
             )
 
         self.cache = _walk(self.cache, cache1, ())
+        if self.mesh is not None:
+            # keep the DP layout sticky: the host-level splice above loses
+            # the slot-axis sharding of the updated leaves
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
 
     def _decode_iteration(self) -> None:
         active = [s for s in self.slots if s is not None]

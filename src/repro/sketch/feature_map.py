@@ -86,14 +86,20 @@ class SketchFeatureMap:
         row_chunk: int = 4096,
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        axis_name: Optional[str] = None,
     ) -> jax.Array:
-        """Kernel-matrix estimate via row-chunked fused featurization."""
+        """Kernel-matrix estimate via row-chunked fused featurization.
+
+        ``axis_name``: inside a feature-sharded ``shard_map``, psum the
+        partial Gram over that mesh axis (see ``RMFeatureMap.estimate_gram``
+        and DESIGN.md §10).
+        """
         from repro.core.registry import estimate_gram
 
         return estimate_gram(
             lambda Z: self.apply(Z, use_pallas=use_pallas,
                                  interpret=interpret),
-            X, Y, row_chunk=row_chunk,
+            X, Y, row_chunk=row_chunk, axis_name=axis_name,
         )
 
 

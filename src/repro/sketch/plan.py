@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.maclaurin import DotProductKernel
-from repro.core.plan import allocate_features
+from repro.core.plan import BIAS_TAIL_DEGREES, allocate_features
 
 __all__ = [
     "SketchPlan",
@@ -75,7 +75,8 @@ class SketchPlan(NamedTuple):
     h01_a1: float
     input_dim: int
     num_random: int                   # D, the total feature budget
-    coefs_host: Tuple[float, ...]     # a_0..a_{n_max} for diagnostics
+    # a_0..a_{n_max + BIAS_TAIL_DEGREES} (tail window: bias diagnostics only)
+    coefs_host: Tuple[float, ...]
     seed: int                         # allocation seed (reproducibility)
 
     # -- sizes ---------------------------------------------------------------
@@ -122,7 +123,8 @@ class SketchPlan(NamedTuple):
 
     # -- diagnostics ---------------------------------------------------------
     def truncation_bias(self, radius: float) -> float:
-        """Worst-case dropped-degree mass ``sum a_n R^{2n}`` (paper §4.2)."""
+        """Worst-case dropped-degree mass ``sum a_n R^{2n}`` (paper §4.2),
+        tail window beyond n_max included (see core.plan.BIAS_TAIL_DEGREES)."""
         present = set(self.degrees)
         if self.const != 0.0:
             present.add(0)
@@ -185,6 +187,7 @@ def make_sketch_plan(
     q = degree_measure(kernel, n_max, p=p, kind=measure, radius=radius,
                        min_degree=min_degree)
     coefs = kernel.coefs(n_max)
+    coefs_diag = kernel.coefs(n_max + BIAS_TAIL_DEGREES)
 
     prefix = (1 + input_dim) if h01 else (1 if a0 > 0.0 else 0)
     budget = max(num_features - prefix, 0)
@@ -209,7 +212,7 @@ def make_sketch_plan(
         h01_a1=a1 if h01 else 0.0,
         input_dim=input_dim,
         num_random=num_features,
-        coefs_host=tuple(float(c) for c in coefs),
+        coefs_host=tuple(float(c) for c in coefs_diag),
         seed=seed,
     )
 

@@ -55,11 +55,12 @@ def body(g, r):
     out, new_r = compressed_psum_with_feedback({"g": g}, {"g": r}, "pod")
     return out["g"], new_r["g"]
 
-shmapped = jax.jit(jax.shard_map(
-    body, mesh=mesh2,
+from repro.distributed.sharding import shard_map  # noqa: E402
+
+shmapped = jax.jit(shard_map(
+    body, mesh2,
     in_specs=(P("pod"), P("pod")),
     out_specs=(P("pod"), P("pod")),
-    check_vma=False,
 ))
 r = jnp.zeros_like(grads).reshape(4, 128)
 total_err = []

@@ -30,7 +30,10 @@ from repro.core import (
 )
 from repro.optim.compression import dequantize_int8, quantize_int8
 
-_SETTINGS = dict(max_examples=20, deadline=None)
+# Explicitly derandomized (conftest.py's "ci" profile also sets this): the
+# drawn seeds below feed PRNGKeys, so derandomize=True pins every random
+# draw in this module — tier-1 cannot flake on an unlucky example.
+_SETTINGS = dict(max_examples=20, deadline=None, derandomize=True)
 
 
 @settings(**_SETTINGS)
@@ -121,7 +124,7 @@ def test_int8_quantization_bound(seed, scale):
 # ---------------------------------------------------------------------------
 # estimator parity: RM and TensorSketch against the exact kernel Gram
 # ---------------------------------------------------------------------------
-@settings(max_examples=8, deadline=None)
+@settings(max_examples=8, deadline=None, derandomize=True)
 @given(seed=st.integers(0, 2**16))
 def test_estimator_parity_within_eps_bound(seed):
     """Both registry estimators converge to the exact Gram within the paper's

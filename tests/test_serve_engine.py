@@ -86,6 +86,23 @@ def test_engine_rejects_encoder(setup):
         ServingEngine(cfg, {}, num_slots=1, max_len=16)
 
 
+def test_launch_serve_forwards_estimator():
+    """Regression: the serving launcher must thread ``estimator=`` into
+    ``get_config`` — the engine validates the name at construction, so a
+    dropped kwarg silently serves the default "rm" family instead of the
+    requested one."""
+    from repro.launch.serve import make_engine
+
+    eng = make_engine("qwen3-1.7b", smoke=True, attention_mode="rm",
+                      estimator="tensor_sketch", num_slots=1, max_len=32)
+    assert eng.estimator == "tensor_sketch"
+    assert eng.cfg.rm.estimator == "tensor_sketch"
+
+    with pytest.raises(KeyError, match="no_such_estimator"):
+        make_engine("qwen3-1.7b", smoke=True, attention_mode="rm",
+                    estimator="no_such_estimator", num_slots=1, max_len=32)
+
+
 def test_bucketed_prefill_rm_state_matches_unpadded():
     """Right-padding a prompt to a bucket with sentinel positions must leave
     the O(1) RM decode state (and the real-position logits) bit-unchanged —

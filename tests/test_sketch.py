@@ -10,6 +10,12 @@ Covers (DESIGN.md §9):
   * chunked Gram estimation parity (satellite);
   * FeaturePlan/SketchPlan (seed, allocation) serialization round-trips
     (satellite).
+
+Reproducibility: every statistical test in this module draws from PINNED
+PRNG seeds (explicit jax.random.PRNGKey / np.random.default_rng constants —
+no time- or run-dependent entropy), so tier-1 results are identical across
+runs and machines; hypothesis-driven modules get the same guarantee from
+the derandomized "ci" profile in conftest.py.
 """
 import jax
 import jax.numpy as jnp
