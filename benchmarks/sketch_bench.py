@@ -1,19 +1,24 @@
-"""RM vs TensorSketch estimator benchmark at matched feature budgets.
+"""Registry-estimator benchmark (rm / tensor_sketch / ctr) at matched
+feature budgets.
 
-For each configuration, times one full feature-map application per estimator
-(features/sec over the batch) and measures Gram-estimation quality (RMSE
-against the exact kernel matrix on a held-out point set) at the SAME feature
-budget F — the head-to-head the estimator registry exists to answer.
+For each configuration, times one full feature-map application per registry
+estimator (features/sec over the batch) and measures Gram-estimation quality
+(RMSE against the exact kernel matrix on a held-out point set) at the SAME
+feature budget F — the head-to-head the estimator registry exists to
+answer. The sweep iterates ``registry.list_estimators()``, so a newly
+registered family lands in the benchmark (and its JSON trajectory) with no
+edits here.
 
 Paths per estimator:
   * ``*_fused``  — the fused Pallas launch (``--interpret`` runs the Pallas
                    interpreter off-TPU; compiled on TPU),
   * ``*_jnp``    — the XLA mirror (flat matmul + segmented products for RM,
-                   CountSketch + jnp.fft for TensorSketch): what CPU runs in
-                   production.
+                   CountSketch + jnp.fft for TensorSketch, complex64
+                   products for CTR): what CPU runs in production.
 
 Writes ``BENCH_sketch.json`` at the repo root (uploaded as a CI artifact by
-the benchmark smoke job) so later PRs have an RM-vs-TS perf trajectory.
+the benchmark smoke job) so later PRs have a cross-estimator perf
+trajectory; docs/estimators.md quotes the matched-budget comparison.
 
 Usage: python benchmarks/sketch_bench.py [--interpret] [--quick]
 """
@@ -32,6 +37,7 @@ from repro.core import (
     ExponentialDotProductKernel,
     PolynomialKernel,
     make_feature_map,
+    registry,
 )
 
 # (label, kernel, d, F, batch)
@@ -72,7 +78,7 @@ def run(interpret: bool = False, quick: bool = False, repeats: int = 5):
     for label, kern, d, F, batch in configs:
         x = jax.random.normal(jax.random.PRNGKey(1), (batch, d)) * 0.2
         entry = {"d": d, "F": F, "batch": batch}
-        for est in ("rm", "tensor_sketch"):
+        for est in registry.list_estimators():
             fm = make_feature_map(kern, d, F, jax.random.PRNGKey(0),
                                   estimator=est, measure="proportional")
             paths = {
@@ -91,12 +97,15 @@ def run(interpret: bool = False, quick: bool = False, repeats: int = 5):
             entry[f"{est}_gram_rmse"] = _gram_rmse(fm, kern, d)
             yield (f"sketch/{label}/{est}/gram_rmse,"
                    f"{entry[f'{est}_gram_rmse']:.5f}")
-        entry["ts_vs_rm_jnp_speedup"] = (
-            entry["rm_jnp_us"] / entry["tensor_sketch_jnp_us"]
-        )
+        # matched-budget speedups vs the RM baseline, one key per family
+        for est in registry.list_estimators():
+            if est == "rm":
+                continue
+            short = {"tensor_sketch": "ts"}.get(est, est)
+            key = f"{short}_vs_rm_jnp_speedup"
+            entry[key] = entry["rm_jnp_us"] / entry[f"{est}_jnp_us"]
+            yield f"sketch/{label}/{key},{entry[key]:.3f}"
         results[label] = entry
-        yield (f"sketch/{label}/ts_vs_rm_jnp_speedup,"
-               f"{entry['ts_vs_rm_jnp_speedup']:.3f}")
 
     out = Path(__file__).resolve().parent.parent / "BENCH_sketch.json"
     out.write_text(json.dumps(

@@ -1,11 +1,16 @@
-"""Compare the two registry estimators on one kernel-approximation task.
+"""Compare the registry estimators on one kernel-approximation task.
 
-Builds a Random Maclaurin map and a TensorSketch map at the SAME feature
-budget from the estimator registry, then reports Gram RMSE against the exact
-kernel and the accuracy of a linear classifier trained on each feature set —
-the paper's Table-1 pipeline, estimator-swapped with one string.
+Builds a feature map per requested estimator ("rm", "tensor_sketch",
+"ctr", ...) at the SAME feature budget from the estimator registry, then
+reports Gram RMSE against the exact kernel and the accuracy of a linear
+classifier trained on each feature set — the paper's Table-1 pipeline,
+estimator-swapped with one string.
 
 Run: PYTHONPATH=src python examples/estimator_comparison.py
+
+``--estimators a,b,...`` restricts the comparison; the default is EVERY
+registry entry, so a newly registered estimator appears in this comparison
+(and in docs/estimators.md regenerated from it) with zero edits here.
 
 ``--devices N`` forces N host devices and ALSO runs every estimator through
 the sharded execution path (features over the "rm_features" mesh axis,
@@ -17,7 +22,7 @@ import argparse
 import os
 
 
-def main(devices: int = 0):
+def main(devices: int = 0, estimators: str = ""):
     # heavy imports happen AFTER the XLA device-count flag is set
     import jax
     import numpy as np
@@ -48,11 +53,16 @@ def main(devices: int = 0):
 
         mesh = make_feature_mesh(devices)
 
+    names = ([s.strip() for s in estimators.split(",") if s.strip()]
+             if estimators else list(registry.list_estimators()))
+    for name in names:
+        registry.get(name)  # validate early, with the available-name list
+
     K_exact = np.asarray(kern.gram(Xte[:256]))
     print(f"kernel={kern.name}  d={d}  F={F}  devices={len(jax.devices())}")
     print(f"available estimators: {registry.list_estimators()}")
 
-    for name in registry.list_estimators():
+    for name in names:
         fm = make_feature_map(kern, d, F, jax.random.PRNGKey(0),
                               estimator=name, measure="proportional")
         est = np.asarray(fm.estimate_gram(Xte[:256]))
@@ -78,10 +88,13 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices and add the sharded-execution "
                          "comparison (set BEFORE jax initializes)")
+    ap.add_argument("--estimators", type=str, default="",
+                    help="comma-separated registry names to compare "
+                         "(default: every registry entry)")
     args = ap.parse_args()
     if args.devices > 1:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         ).strip()
-    main(args.devices)
+    main(args.devices, args.estimators)

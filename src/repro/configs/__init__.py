@@ -37,7 +37,7 @@ def get_config(arch: str, smoke: bool = False,
     """Resolve an arch id, with optional attention-mode / estimator overrides.
 
     ``estimator`` picks the linear-attention feature family by registry name
-    ("rm" / "tensor_sketch"); it only applies to ``attention_mode="rm"``
+    ("rm" / "tensor_sketch" / "ctr"); it only applies to ``attention_mode="rm"``
     models and is validated against the estimator registry.
     """
     if arch not in _ARCH_MODULES:

@@ -55,6 +55,17 @@ def degree_measure(
 ) -> np.ndarray:
     """Normalized measure q over degrees [0, n_max], zero where a_n == 0.
 
+    Args:
+        kernel: the dot-product kernel supplying Maclaurin coefficients.
+        n_max: last degree in the support.
+        p: geometric decay base for the ``geometric*`` kinds.
+        kind: ``"geometric"`` (paper), ``"geometric_ge2"`` (H0/1),
+            ``"proportional"`` (variance-optimal ``q_n ∝ a_n R^{2n}``).
+        min_degree: zero out degrees below this before renormalizing.
+        radius: data radius R for the proportional measure.
+    Returns:
+        float64 ``[n_max + 1]`` array summing to 1.
+
     Degrees with ``a_n == 0`` never need to be sampled (their feature would be
     identically zero) so we drop them from the support and renormalize — this
     is itself a small variance improvement over literal Algorithm 1 and keeps
@@ -250,9 +261,11 @@ def make_feature_map(
 
     ``estimator`` selects the random-feature family from the estimator
     registry (``repro.core.registry``): ``"rm"`` (default) returns an
-    ``RMFeatureMap``; any other name (e.g. ``"tensor_sketch"``) delegates to
-    that entry's ``make_map`` with the same kwargs — all families share the
-    degree-measure machinery, so downstream code is estimator-agnostic.
+    ``RMFeatureMap``; any other name (``"tensor_sketch"``, ``"ctr"``, or a
+    third-party registration) delegates to that entry's ``make_map`` with
+    the same kwargs — all families share the degree-measure machinery, so
+    downstream code is estimator-agnostic (docs/estimators.md is the
+    choosing guide).
 
     ``mesh`` / ``num_shards`` switch to the SHARDED construction
     (``repro.distributed.estimator``): the budget splits over the

@@ -429,4 +429,6 @@ def apply_plan(
 
 
 def plan_output_dim(plan: FeaturePlan) -> int:
+    """Real output columns of ``apply_plan`` for this plan (prefix columns
+    plus one column per allocated random feature)."""
     return plan.output_dim

@@ -1,7 +1,8 @@
 """Estimator registry — pluggable random-feature estimators behind one name.
 
-Every estimator family in the repo (Random Maclaurin, TensorSketch, future
-entries) is a set of five functions sharing one protocol, keyed by name:
+Every estimator family in the repo (Random Maclaurin, TensorSketch,
+complex-to-real, future entries) is a set of five functions sharing one
+protocol, keyed by name:
 
     make_plan(kernel, input_dim, num_features, *, p, measure, h01, n_max,
               radius, stratified, seed)        -> plan   (hashable, jit-static)
@@ -63,11 +64,30 @@ _BUILTIN_FACTORIES: Dict[str, Callable[[], Estimator]] = {}
 
 
 def register(entry: Estimator) -> Estimator:
+    """Add (or replace) a registry entry under ``entry.name``.
+
+    Args:
+        entry: a fully-populated ``Estimator`` record.
+    Returns:
+        The same entry, so third-party families can register at import time
+        with a decorator-ish one-liner.
+    """
     _REGISTRY[entry.name] = entry
     return entry
 
 
 def get(name: str) -> Estimator:
+    """Resolve an estimator family by name (building lazily if builtin).
+
+    Args:
+        name: registry key — one of ``list_estimators()``.
+    Returns:
+        The ``Estimator`` record.
+    Raises:
+        KeyError: unknown name; the message carries the available names so
+            consumer-side validation errors (e.g. the serving engine's
+            constructor check) are self-explanatory.
+    """
     if name not in _REGISTRY and name in _BUILTIN_FACTORIES:
         register(_BUILTIN_FACTORIES[name]())
     if name not in _REGISTRY:
@@ -144,7 +164,22 @@ def estimate_gram(
 # ---------------------------------------------------------------------------
 # built-in entries
 # ---------------------------------------------------------------------------
+def _plan_output_dim(plan) -> int:
+    """Protocol ``output_dim``: real output columns of ``apply`` for this
+    plan (every built-in plan type exposes it as a property)."""
+    return plan.output_dim
+
+
+def _plan_truncation_bias(plan, radius: float) -> float:
+    """Protocol ``truncation_bias``: worst-case dropped-degree kernel mass
+    ``sum a_n radius^{2n}`` over unallocated degrees (paper §4.2), including
+    the ``BIAS_TAIL_DEGREES`` coefficient window beyond n_max."""
+    return plan.truncation_bias(radius)
+
+
 def _rm_init_params(plan, key, dtype=jnp.float32):
+    """Protocol ``init_params`` for "rm": ``{"omegas": [total_rows, d]}``
+    flat Rademacher draws (``core.plan.init_omegas``)."""
     from repro.core.plan import init_omegas
 
     return {"omegas": init_omegas(plan, key, dtype)}
@@ -152,6 +187,9 @@ def _rm_init_params(plan, key, dtype=jnp.float32):
 
 def _rm_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
               interpret=None):
+    """Protocol ``apply`` for "rm": ``x [..., d] -> [..., plan.output_dim]``
+    through the fused ``core.plan.apply_plan`` path (one Pallas launch on
+    TPU, flat matmul + segmented products off)."""
     from repro.core.plan import apply_plan
 
     return apply_plan(plan, params["omegas"], x, accum_dtype=accum_dtype,
@@ -160,19 +198,36 @@ def _rm_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
 
 def _ts_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
               interpret=None):
-    # Like the RM path's per-scan-step pack_omegas, the frequency-domain
-    # pack re-runs per call here (hash tables are the stored params — exact
-    # in any dtype, where pre-packed cos/sin tensors would be degraded by
-    # the bf16 compute cast). Callers outside a layer scan can cache via
-    # apply_sketch_plan(packed=...); storing pre-packed params is the same
-    # remaining headroom DESIGN.md §3 notes for RM.
+    """Protocol ``apply`` for "tensor_sketch": ``x [..., d] ->
+    [..., plan.output_dim]`` via ``sketch.plan.apply_sketch_plan``.
+
+    Like the RM path's per-scan-step pack_omegas, the frequency-domain
+    pack re-runs per call here (hash tables are the stored params — exact
+    in any dtype, where pre-packed cos/sin tensors would be degraded by
+    the bf16 compute cast). Callers outside a layer scan can cache via
+    apply_sketch_plan(packed=...); storing pre-packed params is the same
+    remaining headroom DESIGN.md §3 notes for RM.
+    """
     from repro.sketch.plan import apply_sketch_plan
 
     return apply_sketch_plan(plan, params, x, accum_dtype=accum_dtype,
                              use_pallas=use_pallas, interpret=interpret)
 
 
+def _ctr_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
+               interpret=None):
+    """Protocol ``apply`` for "ctr": ``x [..., d] ->
+    [..., plan.output_dim]`` via ``ctr.plan.apply_ctr_plan`` (stacked
+    real/imag halves of the complex products; pack_ctr re-runs per call —
+    same caching note as the other families)."""
+    from repro.ctr.plan import apply_ctr_plan
+
+    return apply_ctr_plan(plan, params, x, accum_dtype=accum_dtype,
+                          use_pallas=use_pallas, interpret=interpret)
+
+
 def _make_rm_entry() -> Estimator:
+    """Factory for the "rm" (Random Maclaurin, Kar & Karnick) entry."""
     from repro.core.feature_map import make_feature_map
     from repro.core.plan import make_feature_plan
 
@@ -182,12 +237,13 @@ def _make_rm_entry() -> Estimator:
         init_params=_rm_init_params,
         apply=_rm_apply,
         make_map=make_feature_map,
-        output_dim=lambda plan: plan.output_dim,
-        truncation_bias=lambda plan, radius: plan.truncation_bias(radius),
+        output_dim=_plan_output_dim,
+        truncation_bias=_plan_truncation_bias,
     )
 
 
 def _make_ts_entry() -> Estimator:
+    """Factory for the "tensor_sketch" (Pham & Pagh) entry."""
     from repro.sketch.feature_map import make_sketch_feature_map
     from repro.sketch.plan import init_sketch_params, make_sketch_plan
 
@@ -197,10 +253,27 @@ def _make_ts_entry() -> Estimator:
         init_params=init_sketch_params,
         apply=_ts_apply,
         make_map=make_sketch_feature_map,
-        output_dim=lambda plan: plan.output_dim,
-        truncation_bias=lambda plan, radius: plan.truncation_bias(radius),
+        output_dim=_plan_output_dim,
+        truncation_bias=_plan_truncation_bias,
+    )
+
+
+def _make_ctr_entry() -> Estimator:
+    """Factory for the "ctr" (complex-to-real, Wacker et al. 2022) entry."""
+    from repro.ctr.feature_map import make_ctr_feature_map
+    from repro.ctr.plan import init_ctr_params, make_ctr_plan
+
+    return Estimator(
+        name="ctr",
+        make_plan=make_ctr_plan,
+        init_params=init_ctr_params,
+        apply=_ctr_apply,
+        make_map=make_ctr_feature_map,
+        output_dim=_plan_output_dim,
+        truncation_bias=_plan_truncation_bias,
     )
 
 
 _BUILTIN_FACTORIES["rm"] = _make_rm_entry
 _BUILTIN_FACTORIES["tensor_sketch"] = _make_ts_entry
+_BUILTIN_FACTORIES["ctr"] = _make_ctr_entry

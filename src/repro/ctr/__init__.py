@@ -1,0 +1,34 @@
+"""repro.ctr — the complex-to-real (CtR) estimator subsystem (DESIGN.md §11).
+
+A third random-feature family for the paper's dot-product kernels, driven by
+the SAME Taylor-coefficient degree measures as Random Maclaurin but built
+from COMPLEX Rademacher products (Wacker et al., *Improved Random Features
+for Dot Product Kernels*, 2022) whose real/imaginary parts are stacked into
+real columns — lower per-degree variance than RM at a matched real feature
+budget for every degree >= 2 on aligned pairs (see DESIGN.md §11 for the
+exact condition), and measured lowest Gram MSE of the three families on
+the exponential kernel. Registered as ``"ctr"`` in the
+estimator registry (``repro.core.registry``); consumers pick estimators by
+name.
+"""
+from repro.ctr.plan import (
+    CtrPlan,
+    apply_ctr_plan,
+    init_ctr_params,
+    make_ctr_plan,
+    pack_ctr,
+)
+from repro.ctr.feature_map import CtrFeatureMap, make_ctr_feature_map
+from repro.ctr.ref import ctr_blocks_ref, ctr_feature_fused_ref
+
+__all__ = [
+    "CtrPlan",
+    "apply_ctr_plan",
+    "init_ctr_params",
+    "make_ctr_plan",
+    "pack_ctr",
+    "CtrFeatureMap",
+    "make_ctr_feature_map",
+    "ctr_blocks_ref",
+    "ctr_feature_fused_ref",
+]

@@ -1,10 +1,12 @@
-"""SketchFeatureMap — a materialized TensorSketch feature map.
+"""CtrFeatureMap — a materialized complex-to-real feature map.
 
-The TensorSketch counterpart of ``core.feature_map.RMFeatureMap``: a thin
-carrier of (``plan``, ``params``) with the same duck-typed surface
-(``__call__`` / ``apply`` / ``output_dim`` / ``estimate_gram`` /
-``truncation_bias``), so every downstream consumer — ``train_featurized_
-linear``, benchmarks, examples — takes either map without special-casing.
+The CTR counterpart of ``core.feature_map.RMFeatureMap`` and
+``sketch.feature_map.SketchFeatureMap``: a thin carrier of (``plan``,
+``params``) with the same duck-typed surface (``__call__`` / ``apply`` /
+``output_dim`` / ``estimate_gram`` / ``truncation_bias``), so every
+downstream consumer — ``train_featurized_linear``, benchmarks, examples,
+the sharded execution layer — takes any registry family without
+special-casing.
 """
 from __future__ import annotations
 
@@ -15,23 +17,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.maclaurin import DotProductKernel
-from repro.sketch.plan import (
-    SketchPlan,
-    apply_sketch_plan,
-    init_sketch_params,
-    make_sketch_plan,
+from repro.ctr.plan import (
+    CtrPlan,
+    apply_ctr_plan,
+    init_ctr_params,
+    make_ctr_plan,
 )
 
-__all__ = ["SketchFeatureMap", "make_sketch_feature_map"]
+__all__ = ["CtrFeatureMap", "make_ctr_feature_map"]
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class SketchFeatureMap:
-    """(plan, hash tensors) pair; rides through jit/pjit closures."""
+class CtrFeatureMap:
+    """(plan, complex Rademacher draws) pair; rides through jit/pjit
+    closures like the other map objects."""
 
-    plan: SketchPlan
-    params: Dict[str, jax.Array]      # {"h": [num_funcs, d], "s": [num_funcs, d]}
+    plan: CtrPlan
+    params: Dict[str, jax.Array]      # {"wr": [rows, d], "wi": [rows, d]}
 
     # -- pytree plumbing ------------------------------------------------------
     def tree_flatten(self):
@@ -58,14 +61,15 @@ class SketchFeatureMap:
 
     def truncation_bias(self, radius: float) -> float:
         """Worst-case dropped-degree mass (paper §4.2); see
-        ``SketchPlan.truncation_bias``."""
+        ``CtrPlan.truncation_bias``."""
         return self.plan.truncation_bias(radius)
 
     # -- application ----------------------------------------------------------
     def __call__(self, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
-        """Pure-jnp (FFT oracle) path, mirroring ``RMFeatureMap.__call__``."""
-        return apply_sketch_plan(self.plan, self.params, x,
-                                 accum_dtype=accum_dtype, use_pallas=False)
+        """Pure-jnp (complex64 oracle) path, mirroring
+        ``RMFeatureMap.__call__``."""
+        return apply_ctr_plan(self.plan, self.params, x,
+                              accum_dtype=accum_dtype, use_pallas=False)
 
     def apply(
         self,
@@ -75,10 +79,10 @@ class SketchFeatureMap:
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
     ) -> jax.Array:
-        """Backend-routed path: fused Pallas launch on TPU, FFT oracle off."""
-        return apply_sketch_plan(self.plan, self.params, x,
-                                 accum_dtype=accum_dtype,
-                                 use_pallas=use_pallas, interpret=interpret)
+        """Backend-routed path: fused Pallas launch on TPU, oracle off."""
+        return apply_ctr_plan(self.plan, self.params, x,
+                              accum_dtype=accum_dtype,
+                              use_pallas=use_pallas, interpret=interpret)
 
     def estimate_gram(
         self,
@@ -92,9 +96,11 @@ class SketchFeatureMap:
     ) -> jax.Array:
         """Kernel-matrix estimate via row-chunked fused featurization.
 
-        ``axis_name``: inside a feature-sharded ``shard_map``, psum the
-        partial Gram over that mesh axis (see ``RMFeatureMap.estimate_gram``
-        and DESIGN.md §10).
+        Because the CtR columns are REAL, this is the same plain
+        ``Z(X) Z(Y)^T`` every family uses — ``<z_R(x), z_R(y)> =
+        Re(<z(x), conj(z(y))>)`` by construction. ``axis_name``: inside a
+        feature-sharded ``shard_map``, psum the partial Gram over that mesh
+        axis (DESIGN.md §10).
         """
         from repro.core.registry import estimate_gram
 
@@ -105,7 +111,7 @@ class SketchFeatureMap:
         )
 
 
-def make_sketch_feature_map(
+def make_ctr_feature_map(
     kernel: DotProductKernel,
     input_dim: int,
     num_features: int,
@@ -119,13 +125,13 @@ def make_sketch_feature_map(
     omega_dtype=jnp.float32,
     stratified: bool = True,
     seed: int = 0,
-) -> SketchFeatureMap:
-    """Build a ``SketchFeatureMap`` (same signature as ``make_feature_map``)."""
-    plan = make_sketch_plan(
+) -> CtrFeatureMap:
+    """Build a ``CtrFeatureMap`` (same signature as ``make_feature_map``)."""
+    plan = make_ctr_plan(
         kernel, input_dim, num_features,
         p=p, measure=measure, h01=h01, n_max=n_max, radius=radius,
         stratified=stratified, seed=seed,
     )
-    return SketchFeatureMap(
-        plan=plan, params=init_sketch_params(plan, key, omega_dtype)
+    return CtrFeatureMap(
+        plan=plan, params=init_ctr_params(plan, key, omega_dtype)
     )

@@ -1,0 +1,85 @@
+"""jnp reference paths for the complex-to-real (CTR) estimator.
+
+Two oracles (DESIGN.md §11), both emitting the random section only — the
+deterministic prefix columns (h01 block / degree-0 const) are concatenated
+by ``apply_ctr_plan``:
+
+* ``ctr_blocks_ref`` — the production off-TPU path: ONE flat ``complex64``
+  matmul ``x @ (wr + i wi)^T`` plus segmented products per degree bucket
+  (``sum_n c_n n`` projection columns, the exact complex analogue of
+  ``core.plan._apply_plan_flat``). Ground truth for the fused kernel.
+* ``ctr_feature_fused_ref`` — the exact jnp mirror of the Pallas kernel's
+  masked complex running product on the packed ``pack_ctr`` tensors. Used
+  for raw array-level parity tests of ``ctr_feature_fused``.
+
+Output layout (both): ``[ Re of all complex columns, buckets ascending |
+Im of all complex columns, buckets ascending ]`` — ``2 * num_complex``
+real columns, each scaled by its complex column's scale.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.ctr.plan import CtrPlan
+
+__all__ = ["ctr_blocks_ref", "ctr_feature_fused_ref"]
+
+
+def ctr_blocks_ref(
+    plan: CtrPlan, params: Dict[str, jax.Array], x: jax.Array
+) -> jax.Array:
+    """All degree buckets via complex64: ``x [B, d] -> [B, 2 * num_complex]``.
+
+    Complex feature i of bucket n is ``scale_n * prod_{j<n} <w_ij, x>`` with
+    ``w = wr + i wi``; the output stacks ``[Re | Im]`` (CtR convention), so
+    the plain real inner product of two outputs is
+    ``Re(<z(x), conj(z(y))>)`` — the unbiased kernel estimate.
+    """
+    xf = x.astype(jnp.float32)
+    w = (params["wr"].astype(jnp.float32)
+         + 1j * params["wi"].astype(jnp.float32))       # [rows, d] complex64
+    if w.shape[0] == 0:
+        return jnp.zeros((xf.shape[0], 0), jnp.float32)
+    proj = xf.astype(jnp.complex64) @ w.T               # [B, rows]
+    res, ims = [], []
+    off = 0
+    for n, c, scale in zip(plan.degrees, plan.counts, plan.scales):
+        rows = c * n
+        block = proj[:, off : off + rows].reshape(-1, c, n)
+        z = jnp.prod(block, axis=-1) * jnp.float32(scale)   # [B, c] complex
+        res.append(z.real)
+        ims.append(z.imag)
+        off += rows
+    return jnp.concatenate(res + ims, axis=-1)
+
+
+def ctr_feature_fused_ref(
+    x: jax.Array,          # [B, d]
+    wr: jax.Array,         # [max_degree, Fc, d] real part (pack_ctr)
+    wi: jax.Array,         # [max_degree, Fc, d] imag part
+    col_deg: jax.Array,    # [Fc] int32 per-column product depth
+    col_scale: jax.Array,  # [Fc] per-complex-column scale
+) -> jax.Array:            # [B, 2 * Fc] float32
+    """jnp mirror of the fused kernel: masked complex product, ``[Re | Im]``.
+
+    Column f of each half is ``col_scale[f] * Re/Im( prod_{j < col_deg[f]}
+    <wr[j,f] + i wi[j,f], x> )`` — identical ordering and masking to
+    ``ctr_feature_fused_pallas``, in plain jnp.
+    """
+    xf = x.astype(jnp.float32)
+    k, fc, _ = wr.shape
+    ar = jnp.ones((xf.shape[0], fc), jnp.float32)
+    ai = jnp.zeros((xf.shape[0], fc), jnp.float32)
+    for j in range(k):
+        pr = xf @ wr[j].astype(jnp.float32).T
+        pi = xf @ wi[j].astype(jnp.float32).T
+        keep = (j < col_deg)[None, :]
+        nr = ar * pr - ai * pi
+        ni = ar * pi + ai * pr
+        ar = jnp.where(keep, nr, ar)
+        ai = jnp.where(keep, ni, ai)
+    sc = col_scale[None, :].astype(jnp.float32)
+    return jnp.concatenate([ar * sc, ai * sc], axis=-1)

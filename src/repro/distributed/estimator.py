@@ -290,6 +290,12 @@ class ShardedFeatureMap:
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
     ) -> jax.Array:
+        """Featurize ``x [..., d] -> [..., output_dim]`` (all shards'
+        columns, concatenated in shard order at ``1/sqrt(S)`` scale).
+
+        ``sharded`` defaults to "mesh present": True runs the one-launch-
+        per-shard ``shard_map`` path, False the bit-identical host loop.
+        """
         if sharded is None:
             sharded = self.mesh is not None
         return sharded_apply(
@@ -314,6 +320,9 @@ class ShardedFeatureMap:
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
     ) -> jax.Array:
+        """Kernel-matrix estimate ``Z(X) Z(Y)^T`` without gathering the
+        feature columns: per-shard partial Grams, ONE psum (DESIGN.md §10).
+        """
         if sharded is None:
             sharded = self.mesh is not None
         return sharded_estimate_gram(

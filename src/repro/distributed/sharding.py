@@ -190,11 +190,14 @@ _PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
     "ff_up": ("fsdp", "ffn"),
     "ff_down": ("ffn", "fsdp"),
     # estimator params ("rm_est" subtree): replicated (small, frozen).
-    # "omegas" = RM Rademacher rows; "h"/"s" = TensorSketch hash tables.
+    # "omegas" = RM Rademacher rows; "h"/"s" = TensorSketch hash tables;
+    # "wr"/"wi" = CTR complex Rademacher real/imag parts.
     "rm_omegas": (None, None),
     "omegas": (None, None),
     "h": (None, None),
     "s": (None, None),
+    "wr": (None, None),
+    "wi": (None, None),
     "rm_scale": (),
     # norms
     "scale": (None,),

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the perf-critical compute of the paper's technique.
 
-Three kernels (each with an ``ops.py`` jit'd wrapper + a pure-jnp oracle):
+Four kernels (each with an ``ops.py`` jit'd wrapper + a pure-jnp oracle):
 
   * ``rm_feature``     — fused Random-Maclaurin feature map application
                          (projection + degree-product, VMEM-tiled,
@@ -8,16 +8,21 @@ Three kernels (each with an ``ops.py`` jit'd wrapper + a pure-jnp oracle):
   * ``tensor_sketch``  — fused TensorSketch application (frequency-domain
                          CountSketch product + block-diag inverse-DFT; oracle
                          in ``repro.sketch.ref``, DESIGN.md §9).
-  * ``rm_attention``   — chunked causal linear attention over either
+  * ``ctr_feature``    — fused complex-to-real application (masked complex
+                         running product, stacked Re/Im output halves;
+                         oracle in ``repro.ctr.ref``, DESIGN.md §11).
+  * ``rm_attention``   — chunked causal linear attention over any
                          estimator's features (the intra-chunk masked
                          [C,C] x [C,dv] hot loop).
 
 Kernels target TPU; on this CPU container they are validated with
 ``interpret=True`` against the oracles (tests/test_kernels_*.py,
-tests/test_sketch.py).
+tests/test_sketch.py, tests/test_ctr.py).
 """
 from repro.kernels.rm_feature import ops as rm_feature_ops
 from repro.kernels.rm_attention import ops as rm_attention_ops
 from repro.kernels.tensor_sketch import ops as tensor_sketch_ops
+from repro.kernels.ctr_feature import ops as ctr_feature_ops
 
-__all__ = ["rm_feature_ops", "rm_attention_ops", "tensor_sketch_ops"]
+__all__ = ["rm_feature_ops", "rm_attention_ops", "tensor_sketch_ops",
+           "ctr_feature_ops"]

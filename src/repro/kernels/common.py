@@ -8,6 +8,41 @@ from __future__ import annotations
 
 VMEM_BUDGET = 12 * 1024 * 1024  # bytes
 
+# Candidate (block_b, block_f) tiles, largest first — shared by every
+# (batch, feature)-tiled feature-map kernel so a ladder tune lands on all
+# of them at once.
+_BLOCK_LADDER = ((512, 256), (256, 256), (256, 128), (128, 128), (128, 64),
+                 (64, 64), (32, 32), (16, 16), (8, 8))
+
 
 def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
     return (x + m - 1) // m * m
+
+
+def pick_feature_blocks(
+    d: int,
+    depth: int,
+    b: int,
+    f: int,
+    *,
+    weight_tensors: int = 1,
+    accumulators: int = 2,
+) -> tuple[int, int]:
+    """Largest (block_b, block_f) tile whose working set fits VMEM.
+
+    Shared by the (batch, feature)-tiled feature-map kernels
+    (``rm_feature``: one packed weight tensor, two [bm, bf] live buffers;
+    ``ctr_feature``: two weight tensors for the complex pair, four
+    buffers). Working set in fp32 bytes per tile:
+
+        4 * (bm*d + weight_tensors * depth*bf*d + accumulators * bm*bf).
+    """
+    for bm, bf in _BLOCK_LADDER:
+        if bm > max(b, 8) * 2 or bf > max(f, 8) * 2:
+            continue
+        working = 4 * (bm * d + weight_tensors * depth * bf * d
+                       + accumulators * bm * bf)
+        if working <= VMEM_BUDGET:
+            return bm, bf
+    return 8, 8

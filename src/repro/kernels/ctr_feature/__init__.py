@@ -1,0 +1,4 @@
+from repro.kernels.ctr_feature.ops import ctr_feature_fused
+from repro.kernels.ctr_feature.ctr_feature import ctr_feature_fused_pallas
+
+__all__ = ["ctr_feature_fused", "ctr_feature_fused_pallas"]

@@ -23,19 +23,8 @@ from repro.kernels.rm_feature.rm_feature import (
     rm_feature_fused_pallas,
 )
 
-from repro.kernels.common import VMEM_BUDGET as _VMEM_BUDGET
+from repro.kernels.common import pick_feature_blocks as _pick_blocks
 from repro.kernels.common import round_up as _round_up
-
-
-def _pick_blocks(d: int, degree: int, b: int, f: int) -> tuple[int, int]:
-    """Largest 128-multiple (block_b, block_f) whose working set fits VMEM."""
-    for bm, bf in ((512, 256), (256, 256), (256, 128), (128, 128), (128, 64), (64, 64), (32, 32), (16, 16), (8, 8)):
-        if bm > max(b, 8) * 2 or bf > max(f, 8) * 2:
-            continue
-        working = 4 * (bm * d + degree * bf * d + 2 * bm * bf)
-        if working <= _VMEM_BUDGET:
-            return bm, bf
-    return 8, 8
 
 
 # ---------------------------------------------------------------------------

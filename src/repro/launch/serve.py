@@ -57,7 +57,8 @@ def main(argv=None):
     ap.add_argument("--attention-mode", default=None,
                     choices=[None, "exact", "rm"])
     ap.add_argument("--estimator", default=None,
-                    help="feature-estimator registry name (rm/tensor_sketch)")
+                    help="feature-estimator registry name "
+                         "(rm/tensor_sketch/ctr)")
     ap.add_argument("--data-parallel", action="store_true",
                     help="decode over a host mesh (DP slots, replicated "
                          "params)")

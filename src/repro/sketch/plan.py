@@ -138,12 +138,14 @@ class SketchPlan(NamedTuple):
 
     # -- serialization (shared body with FeaturePlan) ------------------------
     def to_json(self) -> str:
+        """Full plan state (seed + realized allocation included) as JSON."""
         from repro.core.plan import plan_to_json
 
         return plan_to_json(self)
 
     @classmethod
     def from_json(cls, s: str) -> "SketchPlan":
+        """Inverse of ``to_json`` (lossless: conformance-tested)."""
         from repro.core.plan import plan_from_json
 
         return plan_from_json(cls, s)

@@ -1,0 +1,79 @@
+"""Docs gate for CI: markdown link check + quickstart execution.
+
+Two checks (ISSUE 4 satellite — the CI ``docs`` job runs this):
+
+1. **Link check** — every relative markdown link in ``README.md``,
+   ``docs/*.md`` and ``DESIGN.md`` must resolve to an existing file or
+   directory (anchors are stripped; ``http(s)``/``mailto`` links are
+   skipped — CI has no network).
+2. **Quickstart smoke** — every fenced ``python`` block in
+   ``docs/quickstart.md`` is executed (in one shared namespace, in order).
+   The quickstart IS the product's first impression; if it drifts from the
+   code, this turns CI red.
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+Exits non-zero on the first category of failure, listing every offender.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must exist too.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _doc_files() -> list[Path]:
+    files = [ROOT / "README.md", ROOT / "DESIGN.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list[str]:
+    """Return a list of 'file: broken-target' strings."""
+    broken = []
+    for md in _doc_files():
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append(f"{md.relative_to(ROOT)}: {target}")
+    return broken
+
+
+def run_quickstart() -> None:
+    """Execute every python fence of docs/quickstart.md in one namespace."""
+    qs = ROOT / "docs" / "quickstart.md"
+    blocks = _FENCE_RE.findall(qs.read_text())
+    if not blocks:
+        raise SystemExit("docs/quickstart.md has no ```python blocks")
+    ns: dict = {"__name__": "__quickstart__"}
+    for i, block in enumerate(blocks):
+        print(f"-- executing quickstart block {i + 1}/{len(blocks)} "
+              f"({len(block.splitlines())} lines)")
+        exec(compile(block, f"{qs}:block{i + 1}", "exec"), ns)
+
+
+def main() -> int:
+    broken = check_links()
+    if broken:
+        print("BROKEN MARKDOWN LINKS:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"link check OK over {len(_doc_files())} files")
+    run_quickstart()
+    print("quickstart OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
