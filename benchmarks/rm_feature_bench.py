@@ -1,99 +1,47 @@
-"""Fused vs per-bucket RM feature-map microbenchmark.
+"""Thin CLI over ``repro.bench``: fused vs per-bucket RM feature map.
 
-Times one full feature-map application per configuration on three paths:
+Times the RM family only, with the legacy one-launch-per-degree baseline
+enabled (``BenchSpec.include_bucketed``) so the fused-kernel speedup
+column keeps its trajectory, at both precision policies. Everything else
+— timing discipline, Gram RMSE, analytic roofline counters, the JSON
+schema — comes from the unified bench subsystem.
 
-  * ``fused``     — ONE Pallas launch over the FeaturePlan packed layout
-                    (interpret mode off-TPU, compiled on TPU),
-  * ``bucketed``  — the legacy path: one Pallas launch per degree bucket
-                    plus a concatenate,
-  * ``fused_jnp`` / ``bucketed_jnp`` — the XLA mirrors (what CPU runs in
-                    production; the Pallas interpreter is a correctness
-                    harness, not a performance target).
+Writes ``BENCH_rm_feature.json`` at the repo root.
 
-Reports wall time and achieved useful FLOP/s (2 * B * d per occupied product
-slot) and writes ``BENCH_rm_feature.json`` next to the repo root so later PRs
-have a perf trajectory. On TPU the fused path additionally saves the
-per-bucket HBM re-reads of x and the final concatenate; the expected headroom
-is roughly the bucket count (see DESIGN.md §3).
+Usage: python benchmarks/rm_feature_bench.py [--interpret] [--quick]
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
-import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import ExponentialDotProductKernel, PolynomialKernel, make_feature_map
-from repro.kernels.rm_feature import apply_feature_map, apply_feature_map_bucketed
-
-# (label, kernel, d, D, batch)
-_CONFIGS = [
-    ("exp_d64_D256_b1024", ExponentialDotProductKernel(1.0), 64, 256, 1024),
-    ("poly7_d32_D512_b512", PolynomialKernel(7, 1.0), 32, 512, 512),
-    ("exp_h01_d24_D192_b512", ExponentialDotProductKernel(1.0), 24, 192, 512),
-]
+_OUT = Path(__file__).resolve().parent.parent / "BENCH_rm_feature.json"
 
 
-def _time_call(fn, x, repeats: int = 5) -> float:
-    """Median wall-time (us) of a jitted call, excluding compile."""
-    fn(x).block_until_ready()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn(x).block_until_ready()
-        times.append(time.perf_counter() - t0)
-    return sorted(times)[len(times) // 2] * 1e6
+def run(interpret: bool = False, quick: bool = False, repeats: int = 5):
+    """Generator of CSV rows (benchmarks/run.py contract); writes the JSON."""
+    from repro.bench import default_spec, quick_spec, run_spec
 
-
-def _useful_flops(fm, batch: int) -> int:
-    plan = fm.plan
-    d = plan.input_dim
-    slots = sum(c * n for c, n in zip(plan.counts, plan.degrees))
-    if plan.h01:
-        slots += plan.input_dim  # identity block, degree 1
-    return 2 * batch * d * slots
-
-
-def run():
-    on_tpu = jax.default_backend() == "tpu"
-    results = {}
-    for label, kern, d, D, batch in _CONFIGS:
-        h01 = "h01" in label
-        fm = make_feature_map(kern, d, D, jax.random.PRNGKey(0), h01=h01)
-        x = jax.random.normal(jax.random.PRNGKey(1), (batch, d)) * 0.2
-        flops = _useful_flops(fm, batch)
-        paths = {
-            "fused": jax.jit(lambda xx, f=fm: apply_feature_map(
-                f, xx, use_pallas=True, interpret=not on_tpu)),
-            "bucketed": jax.jit(lambda xx, f=fm: apply_feature_map_bucketed(
-                f, xx, use_pallas=True, interpret=not on_tpu)),
-            "fused_jnp": jax.jit(lambda xx, f=fm: apply_feature_map(
-                f, xx, use_pallas=False)),
-            "bucketed_jnp": jax.jit(lambda xx, f=fm: apply_feature_map_bucketed(
-                f, xx, use_pallas=False)),
-        }
-        entry = {"buckets": len(fm.plan.degrees), "flops": flops}
-        for path, fn in paths.items():
-            us = _time_call(fn, x)
-            entry[path + "_us"] = us
-            entry[path + "_gflops"] = flops / us / 1e3
-            yield f"rm_feature/{label}/{path},{us:.1f},{flops / us / 1e3:.3f}"
-        entry["fused_speedup"] = entry["bucketed_us"] / entry["fused_us"]
-        entry["fused_jnp_speedup"] = (
-            entry["bucketed_jnp_us"] / entry["fused_jnp_us"]
-        )
-        results[label] = entry
-        yield (f"rm_feature/{label}/speedup,"
-               f"{entry['fused_speedup']:.3f},{entry['fused_jnp_speedup']:.3f}")
-
-    out = Path(__file__).resolve().parent.parent / "BENCH_rm_feature.json"
-    out.write_text(json.dumps(
-        {"backend": jax.default_backend(), "results": results}, indent=2
-    ))
+    spec = (quick_spec(interpret=interpret, include_bucketed=True) if quick
+            else default_spec(interpret=interpret, repeats=repeats,
+                              include_bucketed=True))
+    spec = dataclasses.replace(spec, estimators=("rm",))
+    rows = []
+    payload = run_spec(spec, emit=rows.append)
+    yield from rows
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    yield f"wrote {_OUT}"
 
 
 if __name__ == "__main__":
-    for row in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the Pallas paths in interpret mode (CPU CI)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small configs / fewer repeats")
+    args = ap.parse_args()
+    for row in run(interpret=args.interpret, quick=args.quick,
+                   repeats=2 if args.quick else 5):
         print(row)

@@ -1,15 +1,10 @@
-"""Benchmark: roofline table from the dry-run artifacts.
+"""Thin CLI over ``repro.bench.roofline`` (dry-run roofline rows).
 
-Reads results/dryrun/single/*.json (produced by ``python -m
-repro.launch.dryrun``) and emits one row per (arch x shape):
-``roofline/<arch>/<shape>,compute_us,dominant_term_seconds``.
-
-If the dry-run hasn't been executed, emits a pointer row instead of failing
-(the dry-run needs the 512-device XLA flag and ~1-2h of compiles).
+Kept at this path for ``benchmarks/run.py`` and muscle memory; the logic
+lives in the bench subsystem.
 """
 from __future__ import annotations
 
-import json
 from pathlib import Path
 from typing import List
 
@@ -17,18 +12,11 @@ RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun" / "single"
 
 
 def run() -> List[str]:
-    rows: List[str] = []
-    if not RESULTS.exists():
-        return ["roofline/NOT_RUN(run repro.launch.dryrun),0,0"]
-    for path in sorted(RESULTS.glob("*.json")):
-        rec = json.loads(path.read_text())
-        if rec.get("skipped"):
-            rows.append(f"roofline/{rec['arch']}/{rec['shape']}/SKIP,0,0")
-            continue
-        comp = rec.get("compute_s_corrected", rec.get("compute_s", 0.0))
-        dom = max(comp, rec.get("memory_s", 0), rec.get("collective_s", 0))
-        rows.append(
-            f"roofline/{rec['arch']}/{rec['shape']},"
-            f"{comp * 1e6:.0f},{dom:.4f}"
-        )
-    return rows or ["roofline/EMPTY,0,0"]
+    from repro.bench.roofline import dryrun_roofline_rows
+
+    return dryrun_roofline_rows(RESULTS)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,24 +1,17 @@
-"""Registry-estimator benchmark (rm / tensor_sketch / ctr) at matched
-feature budgets.
+"""Thin CLI over ``repro.bench``: registry-estimator head-to-head.
 
-For each configuration, times one full feature-map application per registry
-estimator (features/sec over the batch) and measures Gram-estimation quality
-(RMSE against the exact kernel matrix on a held-out point set) at the SAME
-feature budget F — the head-to-head the estimator registry exists to
-answer. The sweep iterates ``registry.list_estimators()``, so a newly
-registered family lands in the benchmark (and its JSON trajectory) with no
-edits here.
+For each configuration, times one full feature-map application per
+registry estimator at BOTH precision policies (fp32, bf16) on the fused
+and oracle paths, and measures Gram-estimation quality (RMSE against the
+exact kernel matrix) at the SAME feature budget F — the head-to-head the
+estimator registry exists to answer. The grid, timing, metrics and JSON
+schema all come from the unified bench subsystem (``repro.bench``); this
+script only picks the spec and the output name.
 
-Paths per estimator:
-  * ``*_fused``  — the fused Pallas launch (``--interpret`` runs the Pallas
-                   interpreter off-TPU; compiled on TPU),
-  * ``*_jnp``    — the XLA mirror (flat matmul + segmented products for RM,
-                   CountSketch + jnp.fft for TensorSketch, complex64
-                   products for CTR): what CPU runs in production.
-
-Writes ``BENCH_sketch.json`` at the repo root (uploaded as a CI artifact by
-the benchmark smoke job) so later PRs have a cross-estimator perf
-trajectory; docs/estimators.md quotes the matched-budget comparison.
+Writes ``BENCH_sketch.json`` at the repo root (uploaded as a CI artifact
+by the bench-smoke job) so later PRs have a cross-estimator perf
+trajectory; docs/estimators.md quotes the matched-budget comparison and
+docs/performance.md documents the schema.
 
 Usage: python benchmarks/sketch_bench.py [--interpret] [--quick]
 """
@@ -26,93 +19,22 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (
-    ExponentialDotProductKernel,
-    PolynomialKernel,
-    make_feature_map,
-    registry,
-)
-
-# (label, kernel, d, F, batch)
-_CONFIGS = [
-    ("exp_d64_F256_b1024", ExponentialDotProductKernel(1.0), 64, 256, 1024),
-    ("poly7_d32_F512_b512", PolynomialKernel(7, 1.0), 32, 512, 512),
-    ("exp_d24_F192_b512", ExponentialDotProductKernel(1.0), 24, 192, 512),
-]
-_QUICK_CONFIGS = [
-    ("exp_d16_F128_b128", ExponentialDotProductKernel(1.0), 16, 128, 128),
-    ("poly7_d16_F128_b128", PolynomialKernel(7, 1.0), 16, 128, 128),
-]
-
-
-def _time_call(fn, x, repeats: int = 5) -> float:
-    """Median wall-time (us) of a jitted call, excluding compile."""
-    fn(x).block_until_ready()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn(x).block_until_ready()
-        times.append(time.perf_counter() - t0)
-    return sorted(times)[len(times) // 2] * 1e6
-
-
-def _gram_rmse(fm, kern, d: int, n_points: int = 64) -> float:
-    X = jax.random.normal(jax.random.PRNGKey(7), (n_points, d))
-    X = X / jnp.linalg.norm(X, axis=1, keepdims=True) * 0.8
-    K = np.asarray(kern.gram(X))
-    est = np.asarray(fm.estimate_gram(X))
-    return float(np.sqrt(np.mean((est - K) ** 2)))
+_OUT = Path(__file__).resolve().parent.parent / "BENCH_sketch.json"
 
 
 def run(interpret: bool = False, quick: bool = False, repeats: int = 5):
-    on_tpu = jax.default_backend() == "tpu"
-    configs = _QUICK_CONFIGS if quick else _CONFIGS
-    results = {}
-    for label, kern, d, F, batch in configs:
-        x = jax.random.normal(jax.random.PRNGKey(1), (batch, d)) * 0.2
-        entry = {"d": d, "F": F, "batch": batch}
-        for est in registry.list_estimators():
-            fm = make_feature_map(kern, d, F, jax.random.PRNGKey(0),
-                                  estimator=est, measure="proportional")
-            paths = {
-                "fused": jax.jit(lambda xx, f=fm: f.apply(
-                    xx, use_pallas=True, interpret=interpret or not on_tpu)),
-                "jnp": jax.jit(lambda xx, f=fm: f.apply(
-                    xx, use_pallas=False)),
-            }
-            for path, fn in paths.items():
-                us = _time_call(fn, x, repeats=repeats)
-                feats_per_s = batch * fm.output_dim / (us * 1e-6)
-                entry[f"{est}_{path}_us"] = us
-                entry[f"{est}_{path}_feats_per_s"] = feats_per_s
-                yield f"sketch/{label}/{est}/{path},{us:.1f},{feats_per_s:.3e}"
-            entry[f"{est}_output_dim"] = fm.output_dim
-            entry[f"{est}_gram_rmse"] = _gram_rmse(fm, kern, d)
-            yield (f"sketch/{label}/{est}/gram_rmse,"
-                   f"{entry[f'{est}_gram_rmse']:.5f}")
-        # matched-budget speedups vs the RM baseline, one key per family
-        for est in registry.list_estimators():
-            if est == "rm":
-                continue
-            short = {"tensor_sketch": "ts"}.get(est, est)
-            key = f"{short}_vs_rm_jnp_speedup"
-            entry[key] = entry["rm_jnp_us"] / entry[f"{est}_jnp_us"]
-            yield f"sketch/{label}/{key},{entry[key]:.3f}"
-        results[label] = entry
+    """Generator of CSV rows (benchmarks/run.py contract); writes the JSON."""
+    from repro.bench import default_spec, quick_spec, run_spec
 
-    out = Path(__file__).resolve().parent.parent / "BENCH_sketch.json"
-    out.write_text(json.dumps(
-        {"backend": jax.default_backend(), "interpret": interpret,
-         "quick": quick, "results": results}, indent=2
-    ))
-    yield f"wrote {out}"
+    spec = (quick_spec(interpret=interpret) if quick
+            else default_spec(interpret=interpret, repeats=repeats))
+    rows = []
+    payload = run_spec(spec, emit=rows.append)
+    yield from rows
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    yield f"wrote {_OUT}"
 
 
 if __name__ == "__main__":

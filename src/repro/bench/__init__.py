@@ -1,0 +1,44 @@
+"""repro.bench — the unified perf-regression benchmark subsystem.
+
+One declarative grid (``BenchSpec``: estimator x precision x shape), one
+runner (fused-vs-oracle apply timing, Gram RMSE vs the exact kernel,
+analytic roofline counters), one canonical JSON schema
+(``BENCH_core.json``), and a measured block-ladder autotune pass. The CLI
+is ``python -m repro.bench`` (see ``--help``); the ad-hoc scripts under
+``benchmarks/`` are thin wrappers over these entry points, and the CI
+``bench-core`` job gates the committed artifact's coverage with
+``--check``. docs/performance.md is the usage guide.
+"""
+from repro.bench.schema import (
+    REQUIRED_CELL_KEYS,
+    SCHEMA_VERSION,
+    cell_key,
+    check_file,
+    check_payload,
+    diff_coverage,
+)
+from repro.bench.spec import (
+    BenchSpec,
+    ShapeSpec,
+    default_spec,
+    make_kernel,
+    quick_spec,
+)
+from repro.bench.runner import analytic_cost, autotune_spec, run_spec
+
+__all__ = [
+    "BenchSpec",
+    "ShapeSpec",
+    "default_spec",
+    "quick_spec",
+    "make_kernel",
+    "run_spec",
+    "autotune_spec",
+    "analytic_cost",
+    "SCHEMA_VERSION",
+    "REQUIRED_CELL_KEYS",
+    "cell_key",
+    "check_payload",
+    "check_file",
+    "diff_coverage",
+]

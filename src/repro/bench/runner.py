@@ -1,0 +1,314 @@
+"""The benchmark runner: one mechanism behind every perf entry point.
+
+``run_spec`` walks a ``BenchSpec`` grid and, per (shape, estimator,
+precision) cell, measures:
+
+* **fused vs oracle apply time** — the fused Pallas path (interpret mode
+  off-TPU when ``spec.interpret``) against the jnp/XLA mirror, median
+  wall time over ``spec.repeats`` post-compile calls;
+* **Gram estimation** — wall time of a row-chunked ``estimate_gram`` plus
+  RMSE against the EXACT kernel matrix on a held-out point set (the
+  quality axis: precision policies trade it against throughput);
+* **roofline counters** — analytic useful FLOPs and bytes moved per apply
+  (per estimator family, precision-aware itemsize), plus the TPU-v5e
+  projections derived with the existing roofline hardware model
+  (``repro.analysis.roofline.HW_V5E``). Off-TPU the measured throughput
+  columns time the Pallas INTERPRETER — read the RMSE/roofline columns
+  there; on TPU they are the real trajectory.
+
+``autotune_spec`` drives the measured block-ladder autotuner
+(``repro.kernels.common``) over the same grid: per cell it launches the
+REAL fused kernel at every feasible ladder tile and persists the fastest
+in the block cache all three wrappers consult.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import HW_V5E
+from repro.bench.schema import SCHEMA_VERSION, cell_key
+from repro.bench.spec import BenchSpec, ShapeSpec, make_kernel
+from repro.common.dtypes import resolve_precision
+
+__all__ = ["run_spec", "autotune_spec", "time_call", "analytic_cost"]
+
+
+def time_call(fn: Callable, x, repeats: int = 5) -> float:
+    """Median wall-time (us) of a jitted call, excluding compile."""
+    fn(x).block_until_ready()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def analytic_cost(est_name: str, plan, batch: int,
+                  precision: str) -> Dict[str, float]:
+    """Useful FLOPs + bytes moved per apply, by estimator family.
+
+    FLOPs count occupied product slots only (2*B*d per real dot — the
+    fused kernels' early-exit makes padded slots free); bytes count one
+    HBM read of x and the packed weight tensors at the precision policy's
+    itemsize plus one fp32 write of the output. v5e projections come from
+    the same hardware model the dry-run roofline uses.
+    """
+    prec = resolve_precision(precision)
+    itemsize = jnp.dtype(prec.compute_dtype).itemsize
+    d = plan.input_dim
+    k = plan.max_degree
+    slots = sum(c * n for c, n in zip(plan.counts, plan.degrees))
+    out_dim = plan.output_dim
+    if est_name == "rm":
+        if plan.h01:
+            slots += d                       # identity block, degree 1
+        flops = 2.0 * batch * d * slots
+        weight_elems = k * out_dim * d       # packed [k, F, d]
+    elif est_name == "ctr":
+        flops = 4.0 * batch * d * slots      # wr AND wi dot per slot
+        weight_elems = 2 * k * plan.num_complex * d
+    elif est_name == "tensor_sketch":
+        fs = plan.num_sketch_cols
+        flops = 4.0 * batch * d * slots      # stage 1: complex projections
+        flops += sum(4.0 * batch * c * c for c in plan.counts)  # stage 2
+        weight_elems = 2 * k * fs * d + 2 * fs * fs
+    else:  # third-party family: generic product-feature model
+        flops = 2.0 * batch * d * slots
+        weight_elems = k * out_dim * d
+    bytes_moved = (itemsize * (batch * d + weight_elems)
+                   + 4.0 * batch * out_dim)
+    return {
+        "flops": float(flops),
+        "bytes_moved": float(bytes_moved),
+        "intensity_flops_per_byte": float(flops / max(bytes_moved, 1.0)),
+        "v5e_compute_us": float(flops / HW_V5E.peak_flops * 1e6),
+        "v5e_memory_us": float(bytes_moved / HW_V5E.hbm_bw * 1e6),
+    }
+
+
+def _gram_rmse_and_us(fm, kern, X, *, precision: str,
+                      repeats: int) -> Tuple[float, float]:
+    """(RMSE vs exact kernel, median Gram wall-time us) on the oracle path."""
+    K = np.asarray(kern.gram(X))
+
+    @jax.jit
+    def gram(Z):
+        return fm.estimate_gram(Z, use_pallas=False, precision=precision)
+
+    us = time_call(gram, X, repeats=repeats)
+    est = np.asarray(gram(X))
+    return float(np.sqrt(np.mean((est - K) ** 2))), us
+
+
+def run_cell(
+    shape: ShapeSpec,
+    est_name: str,
+    precision: str,
+    *,
+    interpret: bool,
+    repeats: int,
+) -> Dict[str, float]:
+    """All metrics for one (shape, estimator, precision) cell."""
+    from repro.core import make_feature_map
+
+    kern = make_kernel(shape.kernel)
+    on_tpu = jax.default_backend() == "tpu"
+    fm = make_feature_map(kern, shape.d, shape.F, jax.random.PRNGKey(0),
+                          estimator=est_name, measure="proportional")
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (shape.batch, shape.d)) * 0.2
+
+    fused = jax.jit(lambda xx: fm.apply(
+        xx, use_pallas=True, interpret=interpret or not on_tpu,
+        precision=precision))
+    oracle = jax.jit(lambda xx: fm.apply(
+        xx, use_pallas=False, precision=precision))
+
+    cell: Dict[str, float] = {
+        "output_dim": int(fm.output_dim),
+        "fused_us": time_call(fused, x, repeats=repeats),
+        "oracle_us": time_call(oracle, x, repeats=repeats),
+    }
+    cell["fused_feats_per_s"] = (shape.batch * fm.output_dim
+                                 / (cell["fused_us"] * 1e-6))
+    cell["oracle_feats_per_s"] = (shape.batch * fm.output_dim
+                                  / (cell["oracle_us"] * 1e-6))
+
+    Xg = jax.random.normal(jax.random.PRNGKey(7),
+                           (shape.gram_points, shape.d))
+    Xg = Xg / jnp.linalg.norm(Xg, axis=1, keepdims=True) * 0.8
+    cell["gram_rmse"], cell["gram_us"] = _gram_rmse_and_us(
+        fm, kern, Xg, precision=precision, repeats=repeats)
+
+    cell.update(analytic_cost(est_name, fm.plan, shape.batch, precision))
+    return cell
+
+
+def _bucketed_us(shape: ShapeSpec, *, interpret: bool,
+                 repeats: int) -> float:
+    """Legacy one-launch-per-degree RM baseline (fp32), for the fused
+    speedup column ``benchmarks/rm_feature_bench.py`` tracks."""
+    from repro.core import make_feature_map
+    from repro.kernels.rm_feature import apply_feature_map_bucketed
+
+    kern = make_kernel(shape.kernel)
+    on_tpu = jax.default_backend() == "tpu"
+    fm = make_feature_map(kern, shape.d, shape.F, jax.random.PRNGKey(0),
+                          measure="proportional")
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (shape.batch, shape.d)) * 0.2
+    fn = jax.jit(lambda xx: apply_feature_map_bucketed(
+        fm, xx, use_pallas=True, interpret=interpret or not on_tpu))
+    return time_call(fn, x, repeats=repeats)
+
+
+def run_spec(
+    spec: BenchSpec,
+    *,
+    emit: Optional[Callable[[str], None]] = None,
+) -> Dict:
+    """Run the grid; return the canonical BENCH_core payload."""
+    from repro.core import registry
+
+    say = emit or (lambda _row: None)
+    estimators = spec.estimators or registry.list_estimators()
+    results: Dict[str, Dict] = {}
+    for shape in spec.shapes:
+        entry = results.setdefault(shape.label, {
+            "kernel": shape.kernel, "d": shape.d, "F": shape.F,
+            "batch": shape.batch, "cells": {},
+        })
+        for est in estimators:
+            for prec in spec.precisions:
+                cell = run_cell(shape, est, prec,
+                                interpret=spec.interpret,
+                                repeats=spec.repeats)
+                ck = cell_key(est, prec)
+                entry["cells"][ck] = cell
+                say(f"bench/{shape.label}/{ck},"
+                    f"{cell['fused_us']:.1f},"
+                    f"{cell['fused_feats_per_s']:.3e}")
+                say(f"bench/{shape.label}/{ck}/gram_rmse,"
+                    f"{cell['gram_rmse']:.5f},{cell['gram_us']:.1f}")
+        if spec.include_bucketed and "rm" in estimators:
+            us = _bucketed_us(shape, interpret=spec.interpret,
+                              repeats=spec.repeats)
+            entry["rm_bucketed_us"] = us
+            # the baseline is fp32; compare against the first rm cell the
+            # spec actually ran (fp32 when present)
+            ref_prec = ("fp32" if "fp32" in spec.precisions
+                        else spec.precisions[0])
+            fused = entry["cells"][cell_key("rm", ref_prec)]["fused_us"]
+            entry["rm_fused_speedup"] = us / fused
+            say(f"bench/{shape.label}/rm_bucketed,{us:.1f},"
+                f"{entry['rm_fused_speedup']:.3f}")
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "interpret": bool(spec.interpret),
+        "quick": bool(spec.quick),
+        "precisions": list(spec.precisions),
+        "estimators": list(estimators),
+        "results": results,
+    }
+
+
+# ---------------------------------------------------------------------------
+# measured block-ladder autotune over a spec grid
+# ---------------------------------------------------------------------------
+def autotune_cell(shape: ShapeSpec, est_name: str, precision: str,
+                  *, interpret: bool, repeats: int = 3) -> Optional[tuple]:
+    """Autotune the fused launch for one cell; returns the winning blocks.
+
+    Builds the cell's map, packs its fused tensors, and times the REAL
+    kernel at every feasible ladder tile via the wrappers' ``blocks=``
+    hook; the winner lands in the persistent per-(kernel, shape, dtype,
+    backend) cache (``repro.kernels.common``).
+    """
+    from repro.core import make_feature_map
+    from repro.kernels import common as kcommon
+
+    kern = make_kernel(shape.kernel)
+    prec = resolve_precision(precision)
+    cd = prec.compute_dtype
+    # Same backend rule as run_cell: off-TPU the only viable Pallas mode is
+    # the interpreter — passing interpret=False there would make every
+    # ladder candidate fail and the "winner" would be unmeasured.
+    interpret = interpret or jax.default_backend() != "tpu"
+    fm = make_feature_map(kern, shape.d, shape.F, jax.random.PRNGKey(0),
+                          estimator=est_name, measure="proportional")
+    x = (jax.random.normal(jax.random.PRNGKey(1),
+                           (shape.batch, shape.d)) * 0.2).astype(cd)
+    plan = fm.plan
+    b, d, k = shape.batch, shape.d, plan.max_degree
+    if k == 0:
+        return None
+
+    if est_name == "rm":
+        from repro.core.plan import pack_omegas
+        from repro.kernels.rm_feature.ops import rm_feature_fused
+
+        w = pack_omegas(plan, fm.omegas).astype(cd)
+        deg = jnp.asarray(plan.column_degrees())
+        sc = jnp.asarray(plan.column_scales())
+        launch = lambda bm, bf: rm_feature_fused(
+            x, w, deg, sc, interpret=interpret, blocks=(bm, bf))
+        return kcommon.autotune_feature_blocks(
+            "rm_feature", launch, d, k, b, plan.output_dim,
+            dtype=cd, repeats=repeats)
+    if est_name == "ctr":
+        from repro.ctr.plan import pack_ctr
+        from repro.kernels.ctr_feature.ops import ctr_feature_fused
+
+        wr, wi = pack_ctr(plan, fm.params)
+        wr, wi = wr.astype(cd), wi.astype(cd)
+        deg = jnp.asarray(plan.column_degrees())
+        sc = jnp.asarray(plan.column_scales())
+        launch = lambda bm, bf: ctr_feature_fused(
+            x, wr, wi, deg, sc, interpret=interpret, blocks=(bm, bf))
+        return kcommon.autotune_feature_blocks(
+            "ctr_feature", launch, d, k, b, plan.num_complex,
+            dtype=cd, weight_tensors=2, accumulators=4, repeats=repeats)
+    if est_name == "tensor_sketch":
+        from repro.kernels.tensor_sketch.ops import tensor_sketch_fused
+        from repro.sketch.plan import pack_sketch
+
+        wr, wi, mr, mi = (t.astype(cd)
+                          for t in pack_sketch(plan, fm.params,
+                                               dtype=jnp.float32))
+        deg = jnp.asarray(plan.column_degrees())
+        sc = jnp.asarray(plan.column_scales())
+        f_pad = kcommon.round_up(max(plan.num_sketch_cols, 128), 128)
+        launch = lambda bm, _bf: tensor_sketch_fused(
+            x, wr, wi, deg, mr, mi, sc, interpret=interpret,
+            blocks=(bm, f_pad))
+        cands = [(bm, f_pad) for bm in (512, 256, 128, 64, 32, 16, 8)
+                 if bm <= max(b, 8) * 2]
+        return kcommon.autotune_feature_blocks(
+            "tensor_sketch", launch, d, k, b, f_pad,
+            dtype=cd, candidates=cands, repeats=repeats)
+    return None
+
+
+def autotune_spec(spec: BenchSpec,
+                  *, emit: Optional[Callable[[str], None]] = None,
+                  estimators: Optional[Iterable[str]] = None) -> None:
+    """Autotune every cell of the grid (populates the block cache)."""
+    from repro.core import registry
+
+    say = emit or (lambda _row: None)
+    names = tuple(estimators or spec.estimators
+                  or registry.list_estimators())
+    for shape in spec.shapes:
+        for est in names:
+            for prec in spec.precisions:
+                best = autotune_cell(shape, est, prec,
+                                     interpret=spec.interpret)
+                say(f"autotune/{shape.label}/{cell_key(est, prec)},"
+                    f"{best}")

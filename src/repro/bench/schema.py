@@ -1,0 +1,136 @@
+"""The canonical BENCH_core.json schema + coverage checks.
+
+One JSON layout for every benchmark artifact the repo commits
+(``BENCH_core.json`` at the root, plus the thin-CLI outputs): a payload
+header (schema version, backend, interpret/quick flags) and per-shape
+entries whose ``cells`` map ``"<estimator>/<precision>"`` to the measured
+metrics. The CI ``bench-core`` job calls ``check_payload`` on BOTH the
+fresh artifact and the committed file and fails on any missing cell, so
+"full estimator x {fp32, bf16} x shape coverage" is a gate, not a habit.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "REQUIRED_CELL_KEYS",
+    "cell_key",
+    "check_payload",
+    "check_file",
+    "diff_coverage",
+]
+
+SCHEMA_VERSION = 1
+
+# Every cell must carry these metrics (runner.run_cell emits a superset).
+REQUIRED_CELL_KEYS = (
+    "fused_us",
+    "oracle_us",
+    "fused_feats_per_s",
+    "output_dim",
+    "gram_rmse",
+    "flops",
+    "bytes_moved",
+)
+
+_REQUIRED_SHAPE_KEYS = ("kernel", "d", "F", "batch", "cells")
+
+
+def cell_key(estimator: str, precision: str) -> str:
+    """The canonical cell id: ``"<estimator>/<precision>"``."""
+    return f"{estimator}/{precision}"
+
+
+def check_payload(
+    payload: Dict,
+    *,
+    estimators: Optional[Sequence[str]] = None,
+    precisions: Sequence[str] = ("fp32", "bf16"),
+    min_shapes: int = 3,
+) -> List[str]:
+    """Return a list of human-readable schema/coverage violations.
+
+    ``estimators=None`` checks against the live registry, so a newly
+    registered family makes stale artifacts fail loudly in CI instead of
+    silently dropping out of the trajectory.
+    """
+    if estimators is None:
+        from repro.core import registry
+
+        estimators = registry.list_estimators()
+    errors: List[str] = []
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        errors.append(
+            f"schema_version {payload.get('schema_version')!r} != "
+            f"{SCHEMA_VERSION}"
+        )
+    results = payload.get("results")
+    if not isinstance(results, dict) or not results:
+        return errors + ["payload has no results"]
+    if len(results) < min_shapes:
+        errors.append(f"only {len(results)} shapes, need >= {min_shapes}")
+    for label, entry in results.items():
+        for k in _REQUIRED_SHAPE_KEYS:
+            if k not in entry:
+                errors.append(f"{label}: missing shape key {k!r}")
+        cells = entry.get("cells", {})
+        for est in estimators:
+            for prec in precisions:
+                ck = cell_key(est, prec)
+                if ck not in cells:
+                    errors.append(f"{label}: missing cell {ck}")
+                    continue
+                for mk in REQUIRED_CELL_KEYS:
+                    if mk not in cells[ck]:
+                        errors.append(f"{label}/{ck}: missing metric {mk!r}")
+    return errors
+
+
+def check_file(
+    path,
+    *,
+    estimators: Optional[Sequence[str]] = None,
+    precisions: Sequence[str] = ("fp32", "bf16"),
+    min_shapes: int = 3,
+) -> List[str]:
+    """``check_payload`` on a JSON file; unreadable file -> one error."""
+    try:
+        payload = json.loads(Path(path).read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    return check_payload(payload, estimators=estimators,
+                         precisions=precisions, min_shapes=min_shapes)
+
+
+def diff_coverage(committed: Dict, fresh: Dict) -> List[str]:
+    """Schema/coverage drift between two payloads (either direction).
+
+    The two runs may use different SHAPE grids (the committed trajectory
+    is the full grid; CI smoke runs --quick), so the diff compares the
+    estimator x precision CELL-KEY sets and the schema version — the axes
+    where a silent shrink means a family or a precision fell out of the
+    trajectory. Per-shape completeness is ``check_payload``'s job.
+    """
+    errors: List[str] = []
+    if committed.get("schema_version") != fresh.get("schema_version"):
+        errors.append(
+            f"schema_version drift: committed "
+            f"{committed.get('schema_version')!r} vs fresh "
+            f"{fresh.get('schema_version')!r}"
+        )
+
+    def _cell_keys(payload: Dict):
+        out = set()
+        for entry in (payload.get("results") or {}).values():
+            out.update(entry.get("cells") or {})
+        return out
+
+    a, b = _cell_keys(committed), _cell_keys(fresh)
+    errors += [f"cell {c} covered in committed file but not in fresh run"
+               for c in sorted(a - b)]
+    errors += [f"cell {c} covered in fresh run but not in committed file"
+               for c in sorted(b - a)]
+    return errors

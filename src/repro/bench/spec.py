@@ -1,0 +1,118 @@
+"""Declarative benchmark specs: estimator x precision x shape grids.
+
+A ``BenchSpec`` fully determines one benchmark run — which registry
+estimators, which feature-kernel precision policies, which (kernel, d, F,
+batch) shapes, how many timing repeats, and which execution paths — so the
+runner (``repro.bench.runner``) is pure mechanism and every entry point
+(``python -m repro.bench``, the thin CLIs in ``benchmarks/``, the CI
+``bench-core`` job) is a spec choice, not a separate script.
+
+Specs are frozen dataclasses of plain hashable data; the runner iterates
+shapes x estimators x precisions in deterministic order, and the schema
+checker (``repro.bench.schema``) enforces the resulting cell coverage
+against committed JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+__all__ = [
+    "ShapeSpec",
+    "BenchSpec",
+    "DEFAULT_PRECISIONS",
+    "default_spec",
+    "quick_spec",
+    "make_kernel",
+]
+
+
+DEFAULT_PRECISIONS: Tuple[str, ...] = ("fp32", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One benchmark shape: a kernel, data dim, feature budget, batch.
+
+    ``kernel`` is a symbolic name resolved by ``make_kernel`` ("exp",
+    "poly3", "poly7", ...), so specs stay plain data. ``gram_points`` is
+    the held-out point count for the Gram-RMSE measurement.
+    """
+
+    label: str
+    kernel: str
+    d: int
+    F: int
+    batch: int
+    gram_points: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """The full grid for one benchmark run.
+
+    ``estimators=()`` means "every registry entry at run time" — the
+    runner resolves it against ``registry.list_estimators()`` so newly
+    registered families land in the trajectory with no spec edits.
+    ``include_bucketed`` adds the legacy per-degree-launch RM baseline
+    (fp32 only) next to the fused cells — the comparison
+    ``benchmarks/rm_feature_bench.py`` exists for.
+    """
+
+    shapes: Tuple[ShapeSpec, ...]
+    estimators: Tuple[str, ...] = ()
+    precisions: Tuple[str, ...] = DEFAULT_PRECISIONS
+    repeats: int = 5
+    interpret: bool = False
+    include_bucketed: bool = False
+    quick: bool = False
+
+
+def make_kernel(name: str):
+    """Resolve a symbolic kernel name to a DotProductKernel instance."""
+    from repro.core import ExponentialDotProductKernel, PolynomialKernel
+
+    if name == "exp":
+        return ExponentialDotProductKernel(1.0)
+    if name.startswith("poly"):
+        return PolynomialKernel(int(name[len("poly"):]), 1.0)
+    raise ValueError(f"unknown bench kernel {name!r} (exp | poly<N>)")
+
+
+# The trajectory grids. Shapes are chosen so the FULL grid stays tractable
+# under interpret-mode Pallas on a CPU runner (the throughput columns off
+# TPU measure the interpreter, not the hardware — read the RMSE and
+# roofline columns there) while still spanning low/high degree kernels and
+# thin/wide feature budgets.
+_DEFAULT_SHAPES = (
+    ShapeSpec("exp_d64_F256_b1024", "exp", d=64, F=256, batch=1024),
+    ShapeSpec("poly7_d32_F512_b512", "poly7", d=32, F=512, batch=512),
+    ShapeSpec("exp_d24_F192_b512", "exp", d=24, F=192, batch=512),
+)
+
+_QUICK_SHAPES = (
+    ShapeSpec("exp_d16_F128_b128", "exp", d=16, F=128, batch=128,
+              gram_points=32),
+    ShapeSpec("poly3_d8_F64_b64", "poly3", d=8, F=64, batch=64,
+              gram_points=32),
+    ShapeSpec("exp_d32_F96_b64", "exp", d=32, F=96, batch=64,
+              gram_points=32),
+)
+
+
+def default_spec(*, interpret: bool = False, repeats: int = 5,
+                 include_bucketed: bool = False) -> BenchSpec:
+    """The committed-trajectory grid (BENCH_core.json)."""
+    return BenchSpec(shapes=_DEFAULT_SHAPES, repeats=repeats,
+                     interpret=interpret,
+                     include_bucketed=include_bucketed)
+
+
+def quick_spec(*, interpret: bool = True, repeats: int = 2,
+               include_bucketed: bool = False) -> BenchSpec:
+    """The CI smoke grid: small shapes, full estimator x precision coverage
+    (the bench-core job fails on missing cells, so quick mode still spans
+    >= 3 shapes)."""
+    return BenchSpec(shapes=_QUICK_SHAPES, repeats=repeats,
+                     interpret=interpret,
+                     include_bucketed=include_bucketed, quick=True)

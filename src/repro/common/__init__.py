@@ -6,7 +6,13 @@ from repro.common.tree import (
     flatten_dict,
     unflatten_dict,
 )
-from repro.common.dtypes import DTypePolicy, canonical_dtype
+from repro.common.dtypes import (
+    DTypePolicy,
+    Precision,
+    PRECISIONS,
+    canonical_dtype,
+    resolve_precision,
+)
 
 __all__ = [
     "tree_size",
@@ -15,5 +21,8 @@ __all__ = [
     "flatten_dict",
     "unflatten_dict",
     "DTypePolicy",
+    "Precision",
+    "PRECISIONS",
     "canonical_dtype",
+    "resolve_precision",
 ]

@@ -1,7 +1,28 @@
-"""Mixed-precision policy: params fp32, activations bf16 (configurable)."""
+"""Mixed-precision policies.
+
+Two related but distinct knobs live here:
+
+* ``DTypePolicy`` — the MODEL policy (params / activations / reductions)
+  used by the transformer stacks and the trainer.
+* ``Precision`` — the FEATURE-KERNEL policy threaded through the estimator
+  registry's ``apply`` and the three fused Pallas kernels
+  (``kernels/rm_feature``, ``kernels/tensor_sketch``,
+  ``kernels/ctr_feature``): which dtype the kernel INPUTS (x and the packed
+  weight tensors) are stored/loaded in. Accumulation is ALWAYS fp32 —
+  inside the Pallas bodies every ``dot_general`` carries
+  ``preferred_element_type=float32`` and the running products live in fp32
+  VMEM accumulators; the jnp oracles mirror this with
+  fp32-preferred dots over compute-dtype operands
+  (tests/test_precision.py asserts the bf16 path does NOT collapse to bf16
+  accumulation). The estimator parameters themselves (Rademacher signs,
+  fourth-roots-of-unity, CountSketch signs) take values in {0, +-1}, so
+  bf16 storage is LOSSLESS for the params of all three families; the lossy
+  steps are rounding x and (for TensorSketch) the packed cos/sin tensors.
+"""
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -43,3 +64,64 @@ class DTypePolicy:
 
 FP32 = DTypePolicy(param="float32", compute="float32", accum="float32")
 MIXED = DTypePolicy(param="float32", compute="bfloat16", accum="float32")
+
+
+# ---------------------------------------------------------------------------
+# feature-kernel precision policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Input/weight dtype policy for the fused feature kernels.
+
+    ``compute`` is the dtype of x and the packed weight tensors as they
+    enter the kernel (HBM storage + MXU operand dtype); ``accum`` is the
+    accumulator dtype and is fp32 for every built-in policy — the bf16
+    policy is bf16-in / fp32-accum, never bf16 accumulation.
+    """
+
+    name: str
+    compute: str
+    accum: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return canonical_dtype(self.compute)
+
+    @property
+    def accum_dtype(self):
+        return canonical_dtype(self.accum)
+
+
+PRECISION_FP32 = Precision(name="fp32", compute="float32")
+PRECISION_BF16 = Precision(name="bf16", compute="bfloat16")
+
+PRECISIONS = {p.name: p for p in (PRECISION_FP32, PRECISION_BF16)}
+
+
+def resolve_precision(
+    precision: Optional[Union[str, Precision]] = None,
+) -> Precision:
+    """Normalize a precision argument to a ``Precision`` record.
+
+    ``None`` means fp32 (the historical behavior of every apply path), a
+    string is looked up in ``PRECISIONS``, and a ``Precision`` instance
+    passes through — so consumer configs can carry the policy as a plain
+    hashable string (``cfg.rm.precision``) while library code works with
+    the resolved record.
+
+    Raises:
+        ValueError: unknown name; the message carries the available names
+            so consumer-side validation (e.g. the serving engine's
+            constructor check) is self-explanatory.
+    """
+    if precision is None:
+        return PRECISION_FP32
+    if isinstance(precision, Precision):
+        return precision
+    try:
+        return PRECISIONS[precision]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}; "
+            f"available: {tuple(sorted(PRECISIONS))}"
+        ) from None

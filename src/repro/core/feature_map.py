@@ -202,11 +202,16 @@ class RMFeatureMap:
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
+        precision=None,
     ) -> jax.Array:
-        """Backend-routed fused path (ONE Pallas launch on TPU)."""
+        """Backend-routed fused path (ONE Pallas launch on TPU).
+
+        ``precision`` ("fp32" | "bf16") is the feature-kernel input dtype
+        policy — bf16 inputs/packed weights, fp32 accumulation either way.
+        """
         return apply_plan(
             self.plan, self.omegas, x, accum_dtype=accum_dtype,
-            use_pallas=use_pallas, interpret=interpret,
+            use_pallas=use_pallas, interpret=interpret, precision=precision,
         )
 
     # Convenience: the linear-kernel estimate of K.
@@ -219,6 +224,7 @@ class RMFeatureMap:
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
         axis_name: Optional[str] = None,
+        precision=None,
     ) -> jax.Array:
         """Kernel-matrix estimate through the fused ``apply_plan`` path.
 
@@ -230,12 +236,14 @@ class RMFeatureMap:
         ``axis_name`` is the sharded-execution hook (DESIGN.md §10): when
         this map is one feature shard inside a ``shard_map``, the partial
         Gram is reduced over that mesh axis with a single ``psum``.
+        ``precision`` applies the feature-kernel dtype policy to the
+        featurization; the Gram matmul itself stays fp32.
         """
         from repro.core.registry import estimate_gram
 
         return estimate_gram(
             lambda Z: self.apply(Z, use_pallas=use_pallas,
-                                 interpret=interpret),
+                                 interpret=interpret, precision=precision),
             X, Y, row_chunk=row_chunk, axis_name=axis_name,
         )
 
@@ -251,11 +259,12 @@ def make_feature_map(
     h01: bool = False,
     n_max: int = 24,
     radius: float = 1.0,
-    omega_dtype=jnp.float32,
+    omega_dtype=None,
     stratified: bool = True,
     estimator: str = "rm",
     mesh=None,
     num_shards: Optional[int] = None,
+    precision=None,
 ):
     """Build a feature map (Algorithm 1 / §6.1 H0/1 / beyond-paper measures).
 
@@ -284,7 +293,21 @@ def make_feature_map(
       degree-sampling variance at all (it coincides with the paper's §4.2
       truncated construction when q is the ``proportional`` measure). The
       dropped-degree mass is reported by ``RMFeatureMap.truncation_bias``.
+
+    ``precision`` ("fp32" | "bf16") sets the STORAGE dtype of the drawn
+    parameters to the policy's compute dtype (lossless for every family —
+    the draws take values in {0, +-1}); pass the same policy to
+    ``map.apply(precision=...)`` to run the kernels on bf16 operands.
+    Explicit ``omega_dtype`` wins when both are given (``None`` — the
+    default — means "derive from precision, else fp32").
     """
+    if omega_dtype is None:
+        if precision is not None:
+            from repro.common.dtypes import resolve_precision
+
+            omega_dtype = resolve_precision(precision).compute_dtype
+        else:
+            omega_dtype = jnp.float32
     if mesh is not None or num_shards is not None:
         from repro.distributed.estimator import make_sharded_feature_map
 

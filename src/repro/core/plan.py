@@ -359,23 +359,35 @@ def pack_omegas(plan: FeaturePlan, omegas: jax.Array) -> jax.Array:
 # application — ONE fused launch (or its jnp mirror)
 # ---------------------------------------------------------------------------
 def _apply_plan_flat(
-    plan: FeaturePlan, omegas: jax.Array, xf: jax.Array, accum_dtype
+    plan: FeaturePlan, omegas: jax.Array, xf: jax.Array, compute_dtype,
+    accum_dtype
 ) -> jax.Array:
     """jnp parity path: one flat ``x @ omegas.T`` + segmented products.
 
     Emits the exact fused column order (h01 const, identity block, const,
     buckets ascending) without materializing the ``[max_degree, F]`` masked
     product — XLA-friendly and does only ``sum c_n n`` projection columns.
+
+    Mirrors the Pallas precision contract: the projection operands are cast
+    to ``compute_dtype`` (bf16 under the mixed policy) while the dot itself
+    carries ``preferred_element_type=accum_dtype`` and the segmented
+    products run in ``accum_dtype`` — fp32 accumulation either way.
     """
+    xc = xf.astype(compute_dtype)
     feats = []
     if plan.h01:
         feats.append(jnp.full((xf.shape[0], 1), np.sqrt(plan.h01_a0),
                               dtype=accum_dtype))
-        feats.append(jnp.asarray(np.sqrt(plan.h01_a1), accum_dtype) * xf)
+        feats.append(jnp.asarray(np.sqrt(plan.h01_a1), accum_dtype)
+                     * xc.astype(accum_dtype))
     if plan.const != 0.0:
         feats.append(jnp.full((xf.shape[0], 1), plan.const, dtype=accum_dtype))
     if plan.total_rows:
-        proj = xf @ omegas.astype(accum_dtype).T        # [B, total_rows]
+        proj = jax.lax.dot_general(
+            xc, omegas.astype(compute_dtype),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=accum_dtype,
+        )                                               # [B, total_rows]
         off = 0
         for deg, cnt, scale in zip(plan.degrees, plan.counts, plan.scales):
             rows = cnt * deg
@@ -394,6 +406,7 @@ def apply_plan(
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
     packed: Optional[jax.Array] = None,
+    precision=None,
 ) -> jax.Array:
     """Featurize ``x [..., d] -> [..., plan.output_dim]``.
 
@@ -402,8 +415,15 @@ def apply_plan(
     one Pallas launch on TPU, a flat matmul + segmented products on the jnp
     path. ``use_pallas`` defaults to the backend (True on TPU). ``packed``
     short-circuits ``pack_omegas`` for callers that cache the packed tensor.
+
+    ``precision`` (``None``/``"fp32"``/``"bf16"`` or a
+    ``repro.common.dtypes.Precision``) selects the INPUT dtype policy: under
+    ``"bf16"`` x and the packed omega tensor enter the kernel in bf16 (the
+    Rademacher values +-1 are exact in bf16, so only x is rounded) while
+    accumulation stays fp32 on both paths.
     """
     # Lazy import: core.plan is imported by kernels-level code at call sites.
+    from repro.common.dtypes import resolve_precision
     from repro.kernels.rm_feature.ops import rm_feature_fused
 
     if x.shape[-1] != plan.input_dim:
@@ -412,19 +432,23 @@ def apply_plan(
         )
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    prec = resolve_precision(precision)
+    compute_dtype = prec.compute_dtype
     batch_shape = x.shape[:-1]
-    xf = x.reshape(-1, plan.input_dim).astype(accum_dtype)
+    xf = x.reshape(-1, plan.input_dim)
     if use_pallas:
         w = (packed if packed is not None
-             else pack_omegas(plan, omegas)).astype(accum_dtype)
+             else pack_omegas(plan, omegas)).astype(compute_dtype)
         col_deg = jnp.asarray(plan.column_degrees())
         col_scale = jnp.asarray(plan.column_scales())
         z = rm_feature_fused(
-            xf, w, col_deg, col_scale,
+            xf.astype(compute_dtype), w, col_deg, col_scale,
             use_pallas=True, interpret=interpret,
         )
+        z = z.astype(accum_dtype)
     else:
-        z = _apply_plan_flat(plan, omegas, xf, accum_dtype)
+        z = _apply_plan_flat(plan, omegas, xf.astype(accum_dtype),
+                             compute_dtype, accum_dtype)
     return z.reshape(*batch_shape, z.shape[-1])
 
 

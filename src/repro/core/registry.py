@@ -7,9 +7,15 @@ protocol, keyed by name:
     make_plan(kernel, input_dim, num_features, *, p, measure, h01, n_max,
               radius, stratified, seed)        -> plan   (hashable, jit-static)
     init_params(plan, key, dtype=float32)      -> Dict[str, jax.Array]
-    apply(plan, params, x, *, accum_dtype, use_pallas, interpret) -> features
+    apply(plan, params, x, *, accum_dtype, use_pallas, interpret,
+          precision)                           -> features
     output_dim(plan)                           -> int
     truncation_bias(plan, radius)              -> float
+
+``precision`` (None | "fp32" | "bf16" | repro.common.dtypes.Precision) is
+the feature-kernel mixed-precision policy: it fixes the dtype x and the
+packed weight tensors enter the fused kernels in, while accumulation stays
+fp32 in every family (bf16-in / fp32-accum — see repro.common.dtypes).
 
 Consumers — ``make_feature_map``, RM attention (``models/attention.py`` /
 ``models/mla.py``), the serving engine, benchmarks — resolve
@@ -186,18 +192,19 @@ def _rm_init_params(plan, key, dtype=jnp.float32):
 
 
 def _rm_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
-              interpret=None):
+              interpret=None, precision=None):
     """Protocol ``apply`` for "rm": ``x [..., d] -> [..., plan.output_dim]``
     through the fused ``core.plan.apply_plan`` path (one Pallas launch on
     TPU, flat matmul + segmented products off)."""
     from repro.core.plan import apply_plan
 
     return apply_plan(plan, params["omegas"], x, accum_dtype=accum_dtype,
-                      use_pallas=use_pallas, interpret=interpret)
+                      use_pallas=use_pallas, interpret=interpret,
+                      precision=precision)
 
 
 def _ts_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
-              interpret=None):
+              interpret=None, precision=None):
     """Protocol ``apply`` for "tensor_sketch": ``x [..., d] ->
     [..., plan.output_dim]`` via ``sketch.plan.apply_sketch_plan``.
 
@@ -211,11 +218,12 @@ def _ts_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
     from repro.sketch.plan import apply_sketch_plan
 
     return apply_sketch_plan(plan, params, x, accum_dtype=accum_dtype,
-                             use_pallas=use_pallas, interpret=interpret)
+                             use_pallas=use_pallas, interpret=interpret,
+                             precision=precision)
 
 
 def _ctr_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
-               interpret=None):
+               interpret=None, precision=None):
     """Protocol ``apply`` for "ctr": ``x [..., d] ->
     [..., plan.output_dim]`` via ``ctr.plan.apply_ctr_plan`` (stacked
     real/imag halves of the complex products; pack_ctr re-runs per call —
@@ -223,7 +231,8 @@ def _ctr_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
     from repro.ctr.plan import apply_ctr_plan
 
     return apply_ctr_plan(plan, params, x, accum_dtype=accum_dtype,
-                          use_pallas=use_pallas, interpret=interpret)
+                          use_pallas=use_pallas, interpret=interpret,
+                          precision=precision)
 
 
 def _make_rm_entry() -> Estimator:

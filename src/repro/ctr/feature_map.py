@@ -78,11 +78,17 @@ class CtrFeatureMap:
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
+        precision=None,
     ) -> jax.Array:
-        """Backend-routed path: fused Pallas launch on TPU, oracle off."""
+        """Backend-routed path: fused Pallas launch on TPU, oracle off.
+
+        ``precision`` ("fp32" | "bf16") is the feature-kernel input dtype
+        policy — bf16 inputs/packed weights, fp32 accumulation either way.
+        """
         return apply_ctr_plan(self.plan, self.params, x,
                               accum_dtype=accum_dtype,
-                              use_pallas=use_pallas, interpret=interpret)
+                              use_pallas=use_pallas, interpret=interpret,
+                              precision=precision)
 
     def estimate_gram(
         self,
@@ -93,6 +99,7 @@ class CtrFeatureMap:
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
         axis_name: Optional[str] = None,
+        precision=None,
     ) -> jax.Array:
         """Kernel-matrix estimate via row-chunked fused featurization.
 
@@ -100,13 +107,14 @@ class CtrFeatureMap:
         ``Z(X) Z(Y)^T`` every family uses — ``<z_R(x), z_R(y)> =
         Re(<z(x), conj(z(y))>)`` by construction. ``axis_name``: inside a
         feature-sharded ``shard_map``, psum the partial Gram over that mesh
-        axis (DESIGN.md §10).
+        axis (DESIGN.md §10). ``precision`` applies the feature-kernel
+        dtype policy to the featurization; the Gram matmul stays fp32.
         """
         from repro.core.registry import estimate_gram
 
         return estimate_gram(
             lambda Z: self.apply(Z, use_pallas=use_pallas,
-                                 interpret=interpret),
+                                 interpret=interpret, precision=precision),
             X, Y, row_chunk=row_chunk, axis_name=axis_name,
         )
 

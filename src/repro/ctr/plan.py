@@ -317,6 +317,7 @@ def apply_ctr_plan(
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
     packed: Optional[Tuple[jax.Array, jax.Array]] = None,
+    precision=None,
 ) -> jax.Array:
     """Featurize ``x [..., d] -> [..., plan.output_dim]``.
 
@@ -327,7 +328,14 @@ def apply_ctr_plan(
     ``core.plan.apply_plan``'s contract so the estimator registry exposes
     all families behind one ``apply``; ``packed`` short-circuits
     ``pack_ctr`` for callers that cache the packed tensors.
+
+    ``precision`` selects the input dtype policy: under ``"bf16"`` x and the
+    packed ``wr``/``wi`` tensors enter the kernel in bf16 — the fourth-root
+    values {0, +-1} are exact in bf16, so only x is rounded — while both
+    accumulators stay fp32. The complex64 oracle has no bf16 path, so
+    off-Pallas the policy only rounds x.
     """
+    from repro.common.dtypes import resolve_precision
     from repro.ctr.ref import ctr_blocks_ref
     from repro.kernels.ctr_feature.ops import ctr_feature_fused
 
@@ -337,13 +345,16 @@ def apply_ctr_plan(
         )
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    prec = resolve_precision(precision)
+    compute_dtype = prec.compute_dtype
     batch_shape = x.shape[:-1]
     xf = x.reshape(-1, plan.input_dim).astype(accum_dtype)
     feats = []
     if plan.h01:
         feats.append(jnp.full((xf.shape[0], 1), np.sqrt(plan.h01_a0),
                               dtype=accum_dtype))
-        feats.append(jnp.asarray(np.sqrt(plan.h01_a1), accum_dtype) * xf)
+        feats.append(jnp.asarray(np.sqrt(plan.h01_a1), accum_dtype)
+                     * xf.astype(compute_dtype).astype(accum_dtype))
     if plan.const != 0.0:
         feats.append(jnp.full((xf.shape[0], 1), plan.const,
                               dtype=accum_dtype))
@@ -352,13 +363,16 @@ def apply_ctr_plan(
             wr, wi = (packed if packed is not None
                       else pack_ctr(plan, params))
             z = ctr_feature_fused(
-                xf, wr.astype(accum_dtype), wi.astype(accum_dtype),
+                xf.astype(compute_dtype),
+                wr.astype(compute_dtype), wi.astype(compute_dtype),
                 jnp.asarray(plan.column_degrees()),
                 jnp.asarray(plan.column_scales()),
                 use_pallas=True, interpret=interpret,
-            )
+            ).astype(accum_dtype)
         else:
-            z = ctr_blocks_ref(plan, params, xf)
+            z = ctr_blocks_ref(
+                plan, params, xf.astype(compute_dtype)
+            ).astype(accum_dtype)
         feats.append(z)
     if not feats:
         # fully degenerate plan (a_0 = 0 and the halved budget funded no

@@ -120,13 +120,14 @@ def shard_init_params(
 # apply — features partitioned on the "rm_features" axis
 # ---------------------------------------------------------------------------
 def _reference_apply(est, plan, params, x, *, accum_dtype, use_pallas,
-                     interpret):
+                     interpret, precision=None):
     """Single-device reference: loop shards on host, concat in shard order."""
     s = _num_shards(params)
     scale = jnp.asarray(1.0 / np.sqrt(s), accum_dtype)
     zs = [
         est.apply(plan, _take(params, i), x, accum_dtype=accum_dtype,
-                  use_pallas=use_pallas, interpret=interpret) * scale
+                  use_pallas=use_pallas, interpret=interpret,
+                  precision=precision) * scale
         for i in range(s)
     ]
     return jnp.concatenate(zs, axis=-1)
@@ -143,6 +144,7 @@ def sharded_apply(
     accum_dtype=jnp.float32,
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    precision=None,
 ) -> jax.Array:
     """Featurize ``x [..., d] -> [..., S * output_dim(plan)]`` over the mesh.
 
@@ -157,13 +159,15 @@ def sharded_apply(
     if mesh is None:
         return _reference_apply(est, plan, params, x,
                                 accum_dtype=accum_dtype,
-                                use_pallas=use_pallas, interpret=interpret)
+                                use_pallas=use_pallas, interpret=interpret,
+                                precision=precision)
     s = mesh.shape[axis]
     scale = jnp.asarray(1.0 / np.sqrt(s), accum_dtype)
 
     def local(p, xl):
         z = est.apply(plan, _unstack(p), xl, accum_dtype=accum_dtype,
-                      use_pallas=use_pallas, interpret=interpret)
+                      use_pallas=use_pallas, interpret=interpret,
+                      precision=precision)
         return z * scale
 
     in_specs = (
@@ -191,6 +195,7 @@ def sharded_estimate_gram(
     accum_dtype=jnp.float32,
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    precision=None,
 ) -> jax.Array:
     """Kernel-matrix estimate ``Z(X) Z(Y)^T`` without gathering features.
 
@@ -209,7 +214,8 @@ def sharded_estimate_gram(
     def _apply_fn(p_shard):
         return lambda Z: est.apply(
             plan, p_shard, Z, accum_dtype=accum_dtype,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret,
+            precision=precision)
 
     if mesh is None:
         parts = [
@@ -289,6 +295,7 @@ class ShardedFeatureMap:
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
+        precision=None,
     ) -> jax.Array:
         """Featurize ``x [..., d] -> [..., output_dim]`` (all shards'
         columns, concatenated in shard order at ``1/sqrt(S)`` scale).
@@ -302,7 +309,7 @@ class ShardedFeatureMap:
             self.estimator, self.plan, self.params, x,
             self.mesh if sharded else None, axis=self.axis,
             accum_dtype=accum_dtype, use_pallas=use_pallas,
-            interpret=interpret,
+            interpret=interpret, precision=precision,
         )
 
     def __call__(self, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
@@ -319,6 +326,7 @@ class ShardedFeatureMap:
         row_chunk: int = 4096,
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        precision=None,
     ) -> jax.Array:
         """Kernel-matrix estimate ``Z(X) Z(Y)^T`` without gathering the
         feature columns: per-shard partial Grams, ONE psum (DESIGN.md §10).
@@ -329,6 +337,7 @@ class ShardedFeatureMap:
             self.estimator, self.plan, self.params, X, Y,
             mesh=self.mesh if sharded else None, axis=self.axis,
             row_chunk=row_chunk, use_pallas=use_pallas, interpret=interpret,
+            precision=precision,
         )
 
 

@@ -27,7 +27,10 @@ from jax.experimental import pallas as pl
 
 def _ctr_fused_kernel(x_ref, wr_ref, wi_ref, deg_ref, scale_ref,
                       ore_ref, oim_ref):
-    x = x_ref[...].astype(jnp.float32)            # [bm, d]
+    # Native-dtype MXU operands (fp32 or bf16 under the precision policy);
+    # both accumulators are fp32 VMEM buffers and every dot carries
+    # preferred_element_type=float32 — bf16-in / fp32-accum.
+    x = x_ref[...]                                # [bm, d]
     deg = deg_ref[...]                            # [1, bf] int32
     bm = x.shape[0]
     bf = deg.shape[-1]
@@ -35,9 +38,9 @@ def _ctr_fused_kernel(x_ref, wr_ref, wi_ref, deg_ref, scale_ref,
     def step(j, carry):
         ar, ai = carry
         wr = pl.load(wr_ref, (pl.ds(j, 1), slice(None), slice(None)))
-        wr = wr.reshape(wr.shape[1], wr.shape[2]).astype(jnp.float32)
+        wr = wr.reshape(wr.shape[1], wr.shape[2])
         wi = pl.load(wi_ref, (pl.ds(j, 1), slice(None), slice(None)))
-        wi = wi.reshape(wi.shape[1], wi.shape[2]).astype(jnp.float32)
+        wi = wi.reshape(wi.shape[1], wi.shape[2])
         dims = (((1,), (1,)), ((), ()))
         pr = jax.lax.dot_general(x, wr, dimension_numbers=dims,
                                  preferred_element_type=jnp.float32)

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.ctr.ref import ctr_feature_fused_ref
-from repro.kernels.common import pick_feature_blocks as _pick_feature_blocks
+from repro.kernels.common import default_interpret as _default_interpret
+from repro.kernels.common import get_feature_blocks as _get_blocks
 from repro.kernels.common import round_up as _round_up
 from repro.kernels.ctr_feature.ctr_feature import ctr_feature_fused_pallas
 
@@ -29,6 +30,7 @@ def ctr_feature_fused(
     *,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    blocks: Optional[tuple] = None,
 ) -> jax.Array:            # [..., 2 * Fc] float32, layout [Re | Im]
     """Apply the packed complex buckets: one Pallas launch for every column.
 
@@ -37,9 +39,12 @@ def ctr_feature_fused(
     feature shard over that shard's ``[max_degree, Fc/S, d]`` slice of the
     packed tensors (tests/dist_scripts/run_sharded_estimators.py checks
     interpret-mode parity under shard_map for every registry entry).
+
+    ``x``/``wr``/``wi`` enter the launch in their incoming dtype (bf16
+    under the mixed precision policy); both accumulators are fp32.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = _default_interpret()
     batch_shape = x.shape[:-1]
     d = x.shape[-1]
     k, fc, _ = wr.shape
@@ -53,8 +58,8 @@ def ctr_feature_fused(
     b = xf.shape[0]
     # TWO packed weight tensors and four [bm, bf] live buffers (complex
     # accumulator pair + both output halves)
-    bm, bf = _pick_feature_blocks(d, k, b, fc,
-                                  weight_tensors=2, accumulators=4)
+    bm, bf = blocks or _get_blocks("ctr_feature", d, k, b, fc, dtype=x.dtype,
+                                   weight_tensors=2, accumulators=4)
     b_pad = _round_up(max(b, bm), bm)
     f_pad = _round_up(max(fc, bf), bf)
     xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))

@@ -123,10 +123,12 @@ def rm_attention_causal(
     into the HLO, which is fine for kernel tests but would bloat dry-run
     compiles (tests opt in explicitly with use_pallas=True, interpret=True).
     """
+    from repro.kernels.common import default_interpret
+
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        use_pallas = not default_interpret()
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     if not use_pallas:
         return _causal_chunked_jnp(zq, zk, v, chunk, eps)
     return _causal_pallas(zq, zk, v, chunk, eps, interpret)

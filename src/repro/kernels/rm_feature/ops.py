@@ -23,7 +23,8 @@ from repro.kernels.rm_feature.rm_feature import (
     rm_feature_fused_pallas,
 )
 
-from repro.kernels.common import pick_feature_blocks as _pick_blocks
+from repro.kernels.common import default_interpret as _default_interpret
+from repro.kernels.common import get_feature_blocks as _get_blocks
 from repro.kernels.common import round_up as _round_up
 
 
@@ -38,8 +39,13 @@ def rm_feature_fused(
     *,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    blocks: Optional[tuple] = None,
 ) -> jax.Array:            # [..., F] float32
     """Apply a packed feature map: one Pallas launch for every column.
+
+    ``blocks=(block_b, block_f)`` overrides the cached/heuristic tile
+    choice — the measured ladder autotuner (kernels.common) drives real
+    launches through this hook.
 
     SPMD-safe: no host callbacks and shape-static tiling, so the launch can
     sit inside a ``shard_map`` body — the sharded estimator path
@@ -47,9 +53,14 @@ def rm_feature_fused(
     shard's ``[max_degree, F/S, d]`` slice of the packed tensor
     (tests/dist_scripts/run_sharded_estimators.py checks interpret-mode
     parity under shard_map).
+
+    ``x``/``w`` enter the launch in their incoming dtype — the precision
+    policy (repro.common.dtypes.Precision) casts them to bf16 upstream for
+    the mixed path; accumulation inside the kernel is always fp32 and the
+    output is fp32.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = _default_interpret()
     batch_shape = x.shape[:-1]
     d = x.shape[-1]
     k, f, _ = w.shape
@@ -61,7 +72,7 @@ def rm_feature_fused(
         return out.reshape(*batch_shape, f)
 
     b = xf.shape[0]
-    bm, bf = _pick_blocks(d, k, b, f)
+    bm, bf = blocks or _get_blocks("rm_feature", d, k, b, f, dtype=x.dtype)
     b_pad = _round_up(max(b, bm), bm)
     f_pad = _round_up(max(f, bf), bf)
     xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
@@ -80,17 +91,20 @@ def apply_feature_map(
     *,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    precision=None,
 ) -> jax.Array:
     """Pallas-accelerated equivalent of ``RMFeatureMap.__call__``.
 
     Thin wrapper over the fused path: identical feature layout (h01 block,
     const column, degree buckets ascending) in ONE launch, so downstream code
-    can swap paths freely.
+    can swap paths freely. ``precision`` selects the feature-kernel input
+    dtype policy (``"fp32"`` / ``"bf16"`` — see repro.common.dtypes).
     """
     from repro.core.plan import apply_plan
 
     return apply_plan(
-        fmap.plan, fmap.omegas, x, use_pallas=use_pallas, interpret=interpret
+        fmap.plan, fmap.omegas, x, use_pallas=use_pallas, interpret=interpret,
+        precision=precision,
     )
 
 
@@ -108,7 +122,7 @@ def rm_feature_bucket(
 ) -> jax.Array:
     """Apply one degree bucket: x [.., d], omega [count*degree, d] -> [.., count]."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = _default_interpret()
     batch_shape = x.shape[:-1]
     d = x.shape[-1]
     count = omega.shape[0] // degree
@@ -118,7 +132,7 @@ def rm_feature_bucket(
 
     xf = x.reshape(-1, d)
     b = xf.shape[0]
-    bm, bf = _pick_blocks(d, degree, b, count)
+    bm, bf = _get_blocks("rm_feature", d, degree, b, count, dtype=x.dtype)
     b_pad = _round_up(max(b, bm), bm)
     f_pad = _round_up(max(count, bf), bf)
     xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))

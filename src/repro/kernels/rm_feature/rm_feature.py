@@ -35,14 +35,18 @@ from jax.experimental import pallas as pl
 # fused whole-map kernel
 # ---------------------------------------------------------------------------
 def _rm_fused_kernel(x_ref, w_ref, deg_ref, scale_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)            # [bm, d]
+    # x/w stay in their STORED dtype (fp32 or bf16 under the bf16 precision
+    # policy) — the MXU operands are native, while every dot carries
+    # preferred_element_type=float32 and the running product accumulates in
+    # an fp32 VMEM buffer. bf16-in / fp32-accum, never bf16 accumulation.
+    x = x_ref[...]                                # [bm, d]
     deg = deg_ref[...]                            # [1, bf] int32
     bm = x.shape[0]
     bf = deg.shape[-1]
 
     def step(j, acc):
         w = pl.load(w_ref, (pl.ds(j, 1), slice(None), slice(None)))
-        w = w.reshape(w.shape[1], w.shape[2]).astype(jnp.float32)  # [bf, d]
+        w = w.reshape(w.shape[1], w.shape[2])     # [bf, d]
         pj = jax.lax.dot_general(
             x, w,
             dimension_numbers=(((1,), (1,)), ((), ())),
@@ -91,10 +95,10 @@ def rm_feature_fused_pallas(
 # legacy per-bucket kernel (comparison baseline)
 # ---------------------------------------------------------------------------
 def _rm_feature_kernel(x_ref, w_ref, o_ref, *, degree: int, scale: float):
-    x = x_ref[...].astype(jnp.float32)            # [bm, d]
+    x = x_ref[...]                                # [bm, d] native dtype
     acc = None
     for j in range(degree):
-        w = w_ref[j].astype(jnp.float32)          # [bf, d]
+        w = w_ref[j]                              # [bf, d]
         pj = jax.lax.dot_general(
             x, w,
             dimension_numbers=(((1,), (1,)), ((), ())),

@@ -14,25 +14,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import VMEM_BUDGET as _VMEM_BUDGET
+from repro.kernels.common import default_interpret as _default_interpret
+from repro.kernels.common import get_batch_block as _get_batch_block
 from repro.kernels.common import round_up as _round_up
 from repro.sketch.ref import tensor_sketch_fused_ref
 from repro.kernels.tensor_sketch.tensor_sketch import tensor_sketch_fused_pallas
-
-
-def _pick_block_b(d: int, k: int, fs: int, b: int) -> int:
-    """Largest batch tile whose working set fits the VMEM budget.
-
-    Working set: x tile + both packed weight tensors + both inverse-DFT
-    matrices + three [bm, Fs] live accumulators (out, ar/ai).
-    """
-    fixed = 4 * (2 * k * fs * d + 2 * fs * fs)
-    for bm in (512, 256, 128, 64, 32, 16, 8):
-        if bm > max(b, 8) * 2:
-            continue
-        if fixed + 4 * bm * (d + 3 * fs) <= _VMEM_BUDGET:
-            return bm
-    return 8
 
 
 def tensor_sketch_fused(
@@ -46,6 +32,7 @@ def tensor_sketch_fused(
     *,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    blocks: Optional[tuple] = None,
 ) -> jax.Array:            # [..., Fs] float32
     """Apply the packed sketch blocks: one Pallas launch for every column.
 
@@ -54,9 +41,13 @@ def tensor_sketch_fused(
     per feature shard over that shard's degree blocks. Note the 128-lane
     feature pad is a per-LAUNCH cost, so very thin shards (Fs << 128) pay
     proportionally more padding than a single-device launch would.
+
+    ``x``/``wr``/``wi``/``mr``/``mi`` enter the launch in their incoming
+    dtype (bf16 under the mixed precision policy — the stage-2 inverse-DFT
+    is upcast to fp32 inside the kernel); accumulation is always fp32.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = _default_interpret()
     batch_shape = x.shape[:-1]
     d = x.shape[-1]
     k, fs, _ = wr.shape
@@ -69,7 +60,13 @@ def tensor_sketch_fused(
 
     b = xf.shape[0]
     f_pad = _round_up(max(fs, 128), 128)
-    bm = _pick_block_b(d, k, f_pad, b)   # budget at the PADDED feature count
+    # budget at the PADDED feature count; blocks=(block_b, _) overrides the
+    # cached/heuristic batch tile (the autotuner hook — feature axis stays
+    # fully resident in this kernel, so only the batch tile is tunable).
+    if blocks is not None:
+        bm = int(blocks[0])
+    else:
+        bm = _get_batch_block("tensor_sketch", d, k, f_pad, b, dtype=x.dtype)
     b_pad = _round_up(max(b, bm), bm)
     xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
     pf = f_pad - fs

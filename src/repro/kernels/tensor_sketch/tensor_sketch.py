@@ -31,7 +31,12 @@ from jax.experimental import pallas as pl
 
 def _ts_fused_kernel(x_ref, wr_ref, wi_ref, deg_ref, mr_ref, mi_ref,
                      scale_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)            # [bm, d]
+    # Stage-1 MXU operands stay in their STORED dtype (fp32, or bf16 under
+    # the precision policy — halving the HBM read of x and both packed
+    # weight tensors); the complex accumulator pair is fp32 VMEM and every
+    # dot carries preferred_element_type=float32. Stage 2 runs in fp32 (the
+    # accumulators already are; mr/mi are upcast after their bf16 HBM read).
+    x = x_ref[...]                                # [bm, d]
     deg = deg_ref[...]                            # [1, Fs] int32
     bm = x.shape[0]
     fs = deg.shape[-1]
@@ -39,9 +44,9 @@ def _ts_fused_kernel(x_ref, wr_ref, wi_ref, deg_ref, mr_ref, mi_ref,
     def step(j, carry):
         ar, ai = carry
         wr = pl.load(wr_ref, (pl.ds(j, 1), slice(None), slice(None)))
-        wr = wr.reshape(wr.shape[1], wr.shape[2]).astype(jnp.float32)
+        wr = wr.reshape(wr.shape[1], wr.shape[2])
         wi = pl.load(wi_ref, (pl.ds(j, 1), slice(None), slice(None)))
-        wi = wi.reshape(wi.shape[1], wi.shape[2]).astype(jnp.float32)
+        wi = wi.reshape(wi.shape[1], wi.shape[2])
         dims = (((1,), (1,)), ((), ()))
         pr = jax.lax.dot_general(x, wr, dimension_numbers=dims,
                                  preferred_element_type=jnp.float32)

@@ -87,7 +87,8 @@ def _rm_featurize(
         scale = jax.nn.softplus(params["rm_scale"]).astype(jnp.float32)
     else:
         scale = jnp.float32(cfg.rm.qk_scale)
-    z = rm_estimator(cfg).apply(meta, params["rm_est"], xhat * scale)
+    z = rm_estimator(cfg).apply(meta, params["rm_est"], xhat * scale,
+                                precision=cfg.rm.precision)
     return jnp.transpose(z, (0, 2, 1, 3))  # [B, H, T, F]
 
 

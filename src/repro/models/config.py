@@ -30,11 +30,17 @@ class RMAttentionConfig:
     low-variance default; ``measure='geometric', stratified=False`` is the
     paper-faithful Algorithm 1 sampler. ``estimator`` names the feature
     family in the estimator registry (``repro.core.registry``): ``"rm"``
-    (Random Maclaurin, default) or ``"tensor_sketch"`` (CountSketch + FFT);
-    both are driven by the same Taylor-coefficient measure.
+    (Random Maclaurin, default), ``"tensor_sketch"`` (CountSketch + FFT) or
+    ``"ctr"`` (complex-to-real); all are driven by the same
+    Taylor-coefficient measure. ``precision`` is the feature-kernel
+    mixed-precision policy (``"fp32"`` | ``"bf16"``): under ``"bf16"`` the
+    featurization kernels take bf16 inputs/packed weights with fp32
+    accumulation (repro.common.dtypes.Precision), halving the featurize
+    HBM traffic in attention/MLA prefill and decode.
     """
 
     estimator: str = "rm"
+    precision: str = "fp32"
     num_features: int = 256
     sigma2: float = 1.0
     qk_scale: float = 1.0

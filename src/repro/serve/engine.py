@@ -83,9 +83,13 @@ class ServingEngine:
         # O(1) either way (plan.output_dim fixes the state shapes).
         self.estimator = None
         if cfg.attention_mode == "rm":
+            from repro.common.dtypes import resolve_precision
             from repro.core import registry
 
             self.estimator = registry.get(cfg.rm.estimator).name
+            # Same fail-early rule for the feature-kernel precision policy:
+            # a typo'd cfg.rm.precision raises here with the valid names.
+            resolve_precision(cfg.rm.precision)
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots

@@ -308,6 +308,7 @@ def apply_sketch_plan(
     use_pallas=None,
     interpret=None,
     packed=None,
+    precision=None,
 ) -> jax.Array:
     """Featurize ``x [..., d] -> [..., plan.output_dim]``.
 
@@ -319,7 +320,16 @@ def apply_sketch_plan(
     ``pack_sketch`` — the frequency-domain tensors depend only on the frozen
     hash tables, so callers applying one plan repeatedly (per-layer featurize,
     decode steps) should pack once and pass ``packed=(wr, wi, mr, mi)``.
+
+    ``precision`` selects the input dtype policy: under ``"bf16"`` x and the
+    four packed frequency-domain tensors enter the fused launch in bf16
+    (accumulation stays fp32 inside the kernel). The packing itself always
+    runs in fp32 — the cos/sin phases are computed at full precision, then
+    rounded ONCE to the storage dtype. The ``jnp.fft`` oracle has no bf16
+    path (complex bf16 doesn't exist), so off-Pallas the policy only rounds
+    x; fp32/complex64 carries the rest.
     """
+    from repro.common.dtypes import resolve_precision
     from repro.kernels.tensor_sketch.ops import tensor_sketch_fused
     from repro.sketch.ref import tensor_sketch_blocks_ref
 
@@ -329,13 +339,16 @@ def apply_sketch_plan(
         )
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    prec = resolve_precision(precision)
+    compute_dtype = prec.compute_dtype
     batch_shape = x.shape[:-1]
     xf = x.reshape(-1, plan.input_dim).astype(accum_dtype)
     feats = []
     if plan.h01:
         feats.append(jnp.full((xf.shape[0], 1), np.sqrt(plan.h01_a0),
                               dtype=accum_dtype))
-        feats.append(jnp.asarray(np.sqrt(plan.h01_a1), accum_dtype) * xf)
+        feats.append(jnp.asarray(np.sqrt(plan.h01_a1), accum_dtype)
+                     * xf.astype(compute_dtype).astype(accum_dtype))
     if plan.const != 0.0:
         feats.append(jnp.full((xf.shape[0], 1), plan.const,
                               dtype=accum_dtype))
@@ -343,14 +356,19 @@ def apply_sketch_plan(
         if use_pallas:
             wr, wi, mr, mi = (packed if packed is not None
                               else pack_sketch(plan, params,
-                                               dtype=accum_dtype))
+                                               dtype=jnp.float32))
             z = tensor_sketch_fused(
-                xf, wr, wi, jnp.asarray(plan.column_degrees()), mr, mi,
+                xf.astype(compute_dtype),
+                wr.astype(compute_dtype), wi.astype(compute_dtype),
+                jnp.asarray(plan.column_degrees()),
+                mr.astype(compute_dtype), mi.astype(compute_dtype),
                 jnp.asarray(plan.column_scales()),
                 use_pallas=True, interpret=interpret,
-            )
+            ).astype(accum_dtype)
         else:
-            z = tensor_sketch_blocks_ref(plan, params, xf)
+            z = tensor_sketch_blocks_ref(
+                plan, params, xf.astype(compute_dtype)
+            ).astype(accum_dtype)
         feats.append(z)
     out = jnp.concatenate(feats, axis=-1)
     return out.reshape(*batch_shape, out.shape[-1])

@@ -1,0 +1,139 @@
+"""Tests for the unified benchmark subsystem (repro.bench).
+
+The runner is exercised on a micro grid (interpret-mode fused path, one
+tiny shape) so CI holds the mechanism — spec -> cells -> canonical JSON ->
+coverage gate — without paying real benchmark time. The committed
+``BENCH_core.json`` trajectory artifact is itself schema-checked here, so
+a PR that regenerates it with missing cells fails tier-1 before the
+bench-core CI job even runs.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.bench import (
+    BenchSpec,
+    ShapeSpec,
+    analytic_cost,
+    cell_key,
+    check_file,
+    check_payload,
+    diff_coverage,
+    make_kernel,
+    quick_spec,
+)
+from repro.bench.runner import run_spec
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+_MICRO = BenchSpec(
+    shapes=(ShapeSpec("micro_exp", "exp", d=4, F=16, batch=8,
+                      gram_points=6),),
+    repeats=1,
+    interpret=True,
+    quick=True,
+)
+
+
+@pytest.fixture(scope="module")
+def micro_payload():
+    rows = []
+    payload = run_spec(_MICRO, emit=rows.append)
+    return payload, rows
+
+
+def test_run_spec_full_coverage(micro_payload):
+    payload, rows = micro_payload
+    assert check_payload(payload, min_shapes=1) == []
+    assert rows  # the runner narrates
+    cells = payload["results"]["micro_exp"]["cells"]
+    from repro.core import registry
+
+    for est in registry.list_estimators():
+        for prec in ("fp32", "bf16"):
+            cell = cells[cell_key(est, prec)]
+            assert cell["fused_us"] > 0 and cell["oracle_us"] > 0
+            assert cell["gram_rmse"] >= 0
+            assert cell["flops"] > 0 and cell["bytes_moved"] > 0
+
+
+def test_payload_is_json_round_trippable(micro_payload, tmp_path):
+    payload, _ = micro_payload
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(payload))
+    assert check_file(p, min_shapes=1) == []
+
+
+def test_coverage_gate_catches_missing_cells(micro_payload):
+    payload, _ = micro_payload
+    broken = json.loads(json.dumps(payload))        # deep copy
+    removed = cell_key("rm", "bf16")
+    del broken["results"]["micro_exp"]["cells"][removed]
+    errs = check_payload(broken, min_shapes=1)
+    assert any(removed in e for e in errs)
+    diffs = diff_coverage(payload, broken)
+    assert any(removed in d for d in diffs)
+    # symmetric direction
+    diffs_rev = diff_coverage(broken, payload)
+    assert any(removed in d for d in diffs_rev)
+
+
+def test_schema_rejects_wrong_version(micro_payload):
+    payload, _ = micro_payload
+    stale = dict(payload, schema_version=0)
+    assert any("schema_version" in e
+               for e in check_payload(stale, min_shapes=1))
+
+
+def test_analytic_cost_precision_aware():
+    from repro.core import make_feature_map
+    import jax
+
+    kern = make_kernel("exp")
+    for est in ("rm", "ctr", "tensor_sketch"):
+        fm = make_feature_map(kern, 8, 64, jax.random.PRNGKey(0),
+                              estimator=est, measure="proportional")
+        c32 = analytic_cost(est, fm.plan, 128, "fp32")
+        c16 = analytic_cost(est, fm.plan, 128, "bf16")
+        assert c32["flops"] == c16["flops"]          # same math
+        assert c16["bytes_moved"] < c32["bytes_moved"]  # half the operands
+        assert c16["intensity_flops_per_byte"] > c32[
+            "intensity_flops_per_byte"]
+
+
+def test_make_kernel_names():
+    assert make_kernel("exp").name.startswith("exp")
+    assert make_kernel("poly3") is not None
+    with pytest.raises(ValueError):
+        make_kernel("rbf")
+
+
+def test_quick_spec_meets_ci_coverage_floor():
+    """The CI bench-core job runs --quick and fails on missing cells, so
+    quick mode itself must span >= 3 shapes x both precisions."""
+    spec = quick_spec()
+    assert len(spec.shapes) >= 3
+    assert set(spec.precisions) >= {"fp32", "bf16"}
+
+
+def test_committed_bench_core_artifact_passes_gate():
+    """BENCH_core.json at the repo root must carry full estimator x
+    {fp32, bf16} x >= 3-shape coverage (acceptance criterion)."""
+    path = REPO_ROOT / "BENCH_core.json"
+    assert path.exists(), "BENCH_core.json missing at repo root"
+    assert check_file(path, min_shapes=3) == []
+
+
+def test_cli_check_mode(tmp_path, micro_payload):
+    payload, _ = micro_payload
+    from repro.bench.__main__ import main
+
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(payload))
+    # micro payload has 1 shape < 3 -> the CLI min_shapes=3 gate trips
+    assert main(["--check", str(good)]) == 1
+    assert main(["--check", str(REPO_ROOT / "BENCH_core.json")]) == 0
+    assert main(["--check", str(REPO_ROOT / "BENCH_core.json"),
+                 "--against", str(REPO_ROOT / "BENCH_core.json")]) == 0

@@ -121,3 +121,78 @@ def test_truncation_bias_zero_radius_and_poly(name):
     plan = est.make_plan(PolynomialKernel(3, 1.0), 6, 256,
                          measure="proportional", n_max=8, seed=0)
     assert est.truncation_bias(plan, 1.0) == pytest.approx(0.0, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# edge-shape fuzz: degenerate/boundary launches through all three fused
+# kernels in interpret mode, checked against the reference path
+# ---------------------------------------------------------------------------
+def _check_fused_matches_ref(est, plan, params, x):
+    ref = est.apply(plan, params, x, use_pallas=False)
+    got = est.apply(plan, params, x, use_pallas=True, interpret=True)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_edge_batch_zero(name):
+    """batch=0 row chunks skip the padded launch but keep the shape."""
+    est, plan, params = _build(name)
+    x = jnp.zeros((0, 10))
+    z = est.apply(plan, params, x, use_pallas=True, interpret=True)
+    assert z.shape == (0, est.output_dim(plan))
+    # zero batch inside a leading batch dim too
+    z3 = est.apply(plan, params, jnp.zeros((2, 0, 10)),
+                   use_pallas=True, interpret=True)
+    assert z3.shape == (2, 0, est.output_dim(plan))
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_edge_input_dim_one(name):
+    """d=1: the thinnest possible projection axis."""
+    est, plan, params = _build(name, input_dim=1, num_features=32)
+    x = jax.random.normal(jax.random.PRNGKey(11), (5, 1)) * 0.3
+    _check_fused_matches_ref(est, plan, params, x)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_edge_single_tile(name):
+    """F and batch at the smallest ladder tile: exactly one grid cell."""
+    est, plan, params = _build(name, input_dim=4, num_features=8)
+    x = jax.random.normal(jax.random.PRNGKey(12), (8, 4)) * 0.3
+    _check_fused_matches_ref(est, plan, params, x)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_edge_max_degree_one(name):
+    """n_max=1 plans: product depth exactly 1 in every fused kernel."""
+    est, plan, params = _build(name, num_features=48, n_max=1)
+    assert plan.max_degree <= 1
+    x = jax.random.normal(jax.random.PRNGKey(13), (6, 10)) * 0.3
+    _check_fused_matches_ref(est, plan, params, x)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_edge_noncontiguous_and_uneven_chunks(name):
+    """Non-contiguous (strided) inputs and uneven row chunking agree with
+    the contiguous single-shot application."""
+    est, plan, params = _build(name)
+    X = np.asarray(jax.random.normal(jax.random.PRNGKey(14), (33, 10)) * 0.3)
+    strided = X[::2]                      # non-contiguous numpy view
+    assert not strided.flags["C_CONTIGUOUS"]
+    ref = est.apply(plan, params, jnp.asarray(strided.copy()),
+                    use_pallas=True, interpret=True)
+    got = est.apply(plan, params, strided, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # registry.featurize_chunked with a chunk that doesn't divide N: the
+    # final short chunk still goes through the padded fused launch
+    full = est.apply(plan, params, jnp.asarray(X),
+                     use_pallas=True, interpret=True)
+    chunked = registry.featurize_chunked(
+        lambda Z: est.apply(plan, params, Z, use_pallas=True,
+                            interpret=True),
+        jnp.asarray(X), row_chunk=5)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=1e-6, atol=1e-6)

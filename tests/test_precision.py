@@ -1,0 +1,167 @@
+"""bf16-vs-fp32 parity suite over the whole estimator registry.
+
+Two contracts (ISSUE 5 satellite):
+
+1. **Parity under documented tolerances** — the bf16 precision policy
+   (bf16 inputs/packed weights, fp32 accumulation) may only move features
+   and Gram-MSE by the documented per-estimator budgets below (quoted in
+   docs/performance.md). Parameter storage in bf16 is LOSSLESS for every
+   family (draws take values in {0, +-1}), which is pinned exactly.
+2. **fp32 accumulation** — the bf16 path must NOT collapse to bf16
+   accumulation. Each fused kernel is driven with an adversarial
+   all-ones reduction (4096 terms of 2^-9): fp32 accumulation returns the
+   exact sum 8.0; sequential bf16 accumulation stalls at 1.0 (adding
+   2^-9 to 1.0 is a half-ulp round-to-even no-op in bf16), an 8x error
+   the assertion could not miss.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.dtypes import resolve_precision
+from repro.core import ExponentialDotProductKernel, make_feature_map, registry
+
+ESTIMATORS = registry.list_estimators()
+KERN = ExponentialDotProductKernel(1.0)
+
+# Documented per-estimator bf16 budgets (docs/performance.md):
+#   feature_atol — max |z_bf16 - z_fp32| elementwise on unit-ball inputs;
+#   gram_mse_delta — max |MSE_bf16 - MSE_fp32| of the Gram estimate vs the
+#   exact kernel. tensor_sketch carries the largest budget: its packed
+#   cos/sin tensors round to bf16, where rm/ctr only round x.
+TOLERANCES = {
+    "rm": {"feature_atol": 5e-3, "gram_mse_delta": 5e-5},
+    "ctr": {"feature_atol": 5e-3, "gram_mse_delta": 5e-5},
+    "tensor_sketch": {"feature_atol": 2e-2, "gram_mse_delta": 2e-4},
+}
+_DEFAULT_TOL = {"feature_atol": 2e-2, "gram_mse_delta": 2e-4}
+
+
+def _build(name, *, d=16, F=192):
+    fm = make_feature_map(KERN, d, F, jax.random.PRNGKey(0),
+                          estimator=name, measure="proportional")
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, d))
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True) * 0.8
+    return fm, x
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_bf16_feature_parity_under_tolerance(name):
+    fm, x = _build(name)
+    tol = TOLERANCES.get(name, _DEFAULT_TOL)
+    z32 = np.asarray(fm.apply(x, use_pallas=False))
+    for use_pallas in (False, True):
+        zb = np.asarray(fm.apply(x, use_pallas=use_pallas,
+                                 interpret=True, precision="bf16"))
+        assert zb.dtype == np.float32          # output stays fp32
+        err = np.max(np.abs(zb - z32))
+        assert err <= tol["feature_atol"], (name, use_pallas, err)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_bf16_gram_mse_delta_under_tolerance(name):
+    fm, x = _build(name)
+    tol = TOLERANCES.get(name, _DEFAULT_TOL)
+    K = np.asarray(KERN.gram(x))
+    mse32 = float(np.mean(
+        (np.asarray(fm.estimate_gram(x, use_pallas=False)) - K) ** 2))
+    mseb = float(np.mean(
+        (np.asarray(fm.estimate_gram(x, use_pallas=True, interpret=True,
+                                     precision="bf16")) - K) ** 2))
+    assert abs(mseb - mse32) <= tol["gram_mse_delta"], (name, mse32, mseb)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_bf16_param_storage_is_lossless(name):
+    """{0, +-1}-valued draws survive bf16 storage bit-exactly."""
+    est = registry.get(name)
+    plan = est.make_plan(KERN, 10, 96, measure="proportional", seed=0)
+    p32 = est.init_params(plan, jax.random.PRNGKey(3))
+    pb = est.init_params(plan, jax.random.PRNGKey(3), dtype=jnp.bfloat16)
+    for k in p32:
+        np.testing.assert_array_equal(
+            np.asarray(p32[k], dtype=np.float32),
+            np.asarray(pb[k], dtype=np.float32), err_msg=(name, k))
+
+
+def test_unknown_precision_rejected_with_names():
+    with pytest.raises(ValueError, match="fp32"):
+        resolve_precision("fp8")
+
+
+def _bf16_sequential_sum(x):
+    """What a collapsed bf16 accumulator would compute for sum(x)."""
+    xb = jnp.asarray(x, jnp.bfloat16)
+
+    def body(i, acc):
+        return (acc + xb[i]).astype(jnp.bfloat16)
+
+    return float(jax.lax.fori_loop(0, xb.shape[0], body,
+                                   jnp.bfloat16(0.0)))
+
+
+_D = 4096
+_VAL = 2.0 ** -9          # exact in bf16
+_TRUE = _D * _VAL         # 8.0
+
+
+def test_adversarial_sum_discriminates_accumulators():
+    """Sanity: the probe really separates fp32 from bf16 accumulation."""
+    x = np.full((_D,), _VAL, np.float32)
+    assert abs(float(np.sum(x)) - _TRUE) < 1e-6
+    assert abs(_bf16_sequential_sum(x) - _TRUE) > 0.5 * _TRUE
+
+
+def test_rm_fused_kernel_accumulates_fp32():
+    from repro.kernels.rm_feature.ops import rm_feature_fused
+
+    x = jnp.full((4, _D), _VAL, jnp.bfloat16)
+    w = jnp.ones((1, 8, _D), jnp.bfloat16)        # depth-1, all-ones
+    deg = jnp.ones((8,), jnp.int32)
+    sc = jnp.ones((8,), jnp.float32)
+    out = np.asarray(rm_feature_fused(x, w, deg, sc, interpret=True))
+    np.testing.assert_allclose(out, _TRUE, rtol=1e-3)
+
+
+def test_ctr_fused_kernel_accumulates_fp32():
+    from repro.kernels.ctr_feature.ops import ctr_feature_fused
+
+    x = jnp.full((4, _D), _VAL, jnp.bfloat16)
+    wr = jnp.ones((1, 8, _D), jnp.bfloat16)
+    wi = jnp.zeros((1, 8, _D), jnp.bfloat16)
+    deg = jnp.ones((8,), jnp.int32)
+    sc = jnp.ones((8,), jnp.float32)
+    out = np.asarray(ctr_feature_fused(x, wr, wi, deg, sc, interpret=True))
+    np.testing.assert_allclose(out[:, :8], _TRUE, rtol=1e-3)   # Re half
+    np.testing.assert_allclose(out[:, 8:], 0.0, atol=1e-6)     # Im half
+
+
+def test_tensor_sketch_fused_kernel_accumulates_fp32():
+    from repro.kernels.tensor_sketch.ops import tensor_sketch_fused
+
+    fs = 8
+    x = jnp.full((4, _D), _VAL, jnp.bfloat16)
+    wr = jnp.ones((1, fs, _D), jnp.bfloat16)
+    wi = jnp.zeros((1, fs, _D), jnp.bfloat16)
+    deg = jnp.ones((fs,), jnp.int32)
+    mr = jnp.eye(fs, dtype=jnp.bfloat16)          # identity inverse-DFT
+    mi = jnp.zeros((fs, fs), jnp.bfloat16)
+    sc = jnp.ones((fs,), jnp.float32)
+    out = np.asarray(tensor_sketch_fused(x, wr, wi, deg, mr, mi, sc,
+                                         interpret=True))
+    np.testing.assert_allclose(out, _TRUE, rtol=1e-3)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_registry_bf16_path_not_bf16_accumulated(name):
+    """Registry-level guard: if any family's bf16 path accumulated in
+    bf16, a 512-term structured reduction would lose ~1% of its mass;
+    the fp32-accum contract keeps it at fp32 rounding levels."""
+    fm, _ = _build(name, d=512, F=64)
+    x = jnp.full((3, 512), 2.0 ** -9)
+    z32 = np.asarray(fm.apply(x, use_pallas=False))
+    zb = np.asarray(fm.apply(x, use_pallas=True, interpret=True,
+                             precision="bf16"))
+    scale = max(float(np.max(np.abs(z32))), 1e-6)
+    assert float(np.max(np.abs(zb - z32))) <= 2e-3 * scale
