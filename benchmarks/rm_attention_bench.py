@@ -1,67 +1,50 @@
-"""Benchmark: RM linear attention (the paper's technique applied to the
-softmax kernel) vs exact attention — wall time and approximation quality on
-CPU at small scale, plus the asymptotic op-count ratio.
+"""Thin CLI over ``repro.bench``: fused featurize+attention vs two-launch.
 
-Row: ``rm_attn/<T>/<impl>,us_per_call,derived`` where derived is the mean
-absolute error vs exact softmax attention (for rm rows) or 0 (exact rows).
+Runs the unified bench grid restricted to the RM family — the feature-map
+cells plus the ``fused_attention`` section (fused featurize+attention
+Pallas kernel vs the two-launch featurize-then-attend composition, with
+the analytic HBM-bytes columns showing the removed Z(x) round-trip,
+DESIGN.md §13). The grid, timing discipline, metrics and JSON schema all
+come from ``repro.bench``; this script only picks the spec and the output
+name.
+
+Writes ``BENCH_rm_attention.json`` at the repo root in the canonical
+schema (``repro.bench.schema``), so the fused-vs-two-launch speedup rows
+have a trajectory next to BENCH_core.json's.
+
+Usage: python benchmarks/rm_attention_bench.py [--interpret] [--quick]
 """
 from __future__ import annotations
 
-import time
-from typing import List
+import argparse
+import dataclasses
+import json
+from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import ExponentialDotProductKernel, make_feature_map
-from repro.kernels.rm_attention.ops import rm_attention_causal
+_OUT = Path(__file__).resolve().parent.parent / "BENCH_rm_attention.json"
 
 
-def _exact(q, k, v):
-    t = q.shape[2]
-    s = jnp.einsum("bhtd,bhsd->bhts", q, k)
-    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
-    s = jnp.where(mask, s, -1e30)
-    return jnp.einsum("bhts,bhsd->bhtd", jax.nn.softmax(s, -1), v)
+def run(interpret: bool = False, quick: bool = False, repeats: int = 5):
+    """Generator of CSV rows (benchmarks/run.py contract); writes the JSON."""
+    from repro.bench import default_spec, quick_spec, run_spec
 
-
-def run() -> List[str]:
+    spec = (quick_spec(interpret=interpret) if quick
+            else default_spec(interpret=interpret, repeats=repeats))
+    spec = dataclasses.replace(spec, estimators=("rm",))
     rows = []
-    b, h, dh, dv = 1, 4, 32, 32
-    kern = ExponentialDotProductKernel(1.0)
-    fm = make_feature_map(kern, dh, 192, jax.random.PRNGKey(0),
-                          measure="proportional", stratified=True)
-    for t in (256, 1024):
-        key = jax.random.PRNGKey(t)
-        kq, kk, kv = jax.random.split(key, 3)
-        q = jax.random.normal(kq, (b, h, t, dh))
-        k = jax.random.normal(kk, (b, h, t, dh))
-        q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
-        k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
-        v = jax.random.normal(kv, (b, h, t, dv))
+    payload = run_spec(spec, emit=rows.append)
+    yield from rows
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    yield f"wrote {_OUT}"
 
-        exact_fn = jax.jit(_exact)
-        want = exact_fn(q, k, v)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            exact_fn(q, k, v).block_until_ready()
-        us_exact = (time.perf_counter() - t0) / 3 * 1e6
 
-        def rm_fn(q, k, v):
-            zq = fm(q)
-            zk = fm(k)
-            return rm_attention_causal(zq, zk, v, chunk=128,
-                                       use_pallas=False)
-
-        rm_jit = jax.jit(rm_fn)
-        got = rm_jit(q, k, v)
-        err = float(jnp.mean(jnp.abs(got - want)))
-        t0 = time.perf_counter()
-        for _ in range(3):
-            rm_jit(q, k, v).block_until_ready()
-        us_rm = (time.perf_counter() - t0) / 3 * 1e6
-
-        rows.append(f"rm_attn/T{t}/exact,{us_exact:.0f},0")
-        rows.append(f"rm_attn/T{t}/rm_D192,{us_rm:.0f},{err:.4f}")
-    return rows
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the Pallas paths in interpret mode (CPU CI)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small configs / fewer repeats")
+    args = ap.parse_args()
+    for row in run(interpret=args.interpret, quick=args.quick,
+                   repeats=2 if args.quick else 5):
+        print(row)

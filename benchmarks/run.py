@@ -1,8 +1,8 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV. Sub-benchmarks: fig1 (approximation error), table1 (SVM suite),
-# fig2 (H0/1), rm_attn (the technique applied to attention), rm_feature
-# (fused vs per-bucket feature map, writes BENCH_rm_feature.json), roofline
-# (dry-run derived terms).
+# fig2 (H0/1), rm_attn (fused featurize+attention vs two-launch, writes
+# BENCH_rm_attention.json), rm_feature (fused vs per-bucket feature map,
+# writes BENCH_rm_feature.json), roofline (dry-run derived terms).
 from __future__ import annotations
 
 import sys

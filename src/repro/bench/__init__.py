@@ -10,6 +10,7 @@ is ``python -m repro.bench`` (see ``--help``); the ad-hoc scripts under
 ``--check``. docs/performance.md is the usage guide.
 """
 from repro.bench.schema import (
+    ATTN_REQUIRED_CELL_KEYS,
     REQUIRED_CELL_KEYS,
     SCHEMA_VERSION,
     cell_key,
@@ -18,15 +19,22 @@ from repro.bench.schema import (
     diff_coverage,
 )
 from repro.bench.spec import (
+    AttnShapeSpec,
     BenchSpec,
     ShapeSpec,
     default_spec,
     make_kernel,
     quick_spec,
 )
-from repro.bench.runner import analytic_cost, autotune_spec, run_spec
+from repro.bench.runner import (
+    analytic_cost,
+    attention_hbm_bytes,
+    autotune_spec,
+    run_spec,
+)
 
 __all__ = [
+    "AttnShapeSpec",
     "BenchSpec",
     "ShapeSpec",
     "default_spec",
@@ -35,8 +43,10 @@ __all__ = [
     "run_spec",
     "autotune_spec",
     "analytic_cost",
+    "attention_hbm_bytes",
     "SCHEMA_VERSION",
     "REQUIRED_CELL_KEYS",
+    "ATTN_REQUIRED_CELL_KEYS",
     "cell_key",
     "check_payload",
     "check_file",

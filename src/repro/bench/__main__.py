@@ -45,11 +45,20 @@ def main(argv=None) -> int:
                     help="also time the legacy per-degree RM baseline")
     ap.add_argument("--autotune", action="store_true",
                     help="measured block-ladder autotune before timing")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="pin the jax platform before backend init "
+                         "(repro.common.env.set_platform)")
     ap.add_argument("--check", metavar="FILE", default=None,
                     help="validate FILE's schema/coverage and exit")
     ap.add_argument("--against", metavar="FILE", default=None,
                     help="with --check: also diff cell coverage vs FILE")
     args = ap.parse_args(argv)
+
+    if args.platform:
+        from repro.common import env
+
+        env.set_platform(args.platform)
 
     from repro.bench import schema
 

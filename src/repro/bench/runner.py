@@ -32,10 +32,11 @@ import numpy as np
 
 from repro.analysis.roofline import HW_V5E
 from repro.bench.schema import SCHEMA_VERSION, cell_key
-from repro.bench.spec import BenchSpec, ShapeSpec, make_kernel
+from repro.bench.spec import AttnShapeSpec, BenchSpec, ShapeSpec, make_kernel
 from repro.common.dtypes import resolve_precision
 
-__all__ = ["run_spec", "autotune_spec", "time_call", "analytic_cost"]
+__all__ = ["run_spec", "autotune_spec", "time_call", "analytic_cost",
+           "attention_hbm_bytes"]
 
 
 def time_call(fn: Callable, x, repeats: int = 5) -> float:
@@ -150,6 +151,107 @@ def run_cell(
     return cell
 
 
+def attention_hbm_bytes(est_name: str, plan, shape: AttnShapeSpec,
+                        out_dim: int, precision: str) -> Dict[str, float]:
+    """Analytic HBM traffic of fused vs two-launch causal attention.
+
+    The two-launch composition pays the Z(x) round-trip in full — the two
+    featurize launches WRITE Z(q)/Z(k) to HBM ([rows, F] fp32 each) and the
+    attention launch READS them back — plus a second read of the packed
+    weights (one per featurize launch). The fused kernel streams q/k/v and
+    the weights from HBM once and Z lives only in VMEM, so the removed
+    traffic is the 4 * rows * F * 4-byte round-trip: O(T * F), the term
+    that dominates at serving shapes. Featurize-side byte accounting
+    (operand reads at the precision policy's itemsize, fp32 Z) reuses
+    ``analytic_cost`` so the two tables stay consistent.
+    """
+    prec = resolve_precision(precision)
+    itemsize = jnp.dtype(prec.compute_dtype).itemsize
+    rows = shape.batch * shape.heads * shape.T
+    feat = analytic_cost(est_name, plan, rows, precision)["bytes_moved"]
+    w_bytes = feat - itemsize * rows * shape.d - 4.0 * rows * out_dim
+    # q+k reads at the compute itemsize; v read + out write in fp32
+    qkv_out = itemsize * 2 * rows * shape.d + 4.0 * rows * 2 * shape.dv
+    # the fused causal kernel also emits the decode state (S, n) once
+    state = 4.0 * shape.batch * shape.heads * (out_dim * shape.dv + out_dim)
+    fused = qkv_out + w_bytes + state
+    z_round_trip = 2 * 2 * 4.0 * rows * out_dim   # write then read, q and k
+    two_launch = qkv_out + 2 * w_bytes + z_round_trip
+    return {"hbm_bytes_fused": float(fused),
+            "hbm_bytes_two_launch": float(two_launch)}
+
+
+def run_attention_cell(
+    shape: AttnShapeSpec,
+    est_name: str,
+    precision: str,
+    *,
+    interpret: bool,
+    repeats: int,
+) -> Dict[str, float]:
+    """Fused vs two-launch causal attention timings for one cell.
+
+    Families without a fused path (``fused_attention_supported`` False in
+    the registry) measure the two-launch composition for BOTH columns —
+    that IS what the model layers run for them — with ``fused_supported``
+    False so readers don't mistake the 1.0x for a fusion result.
+    """
+    from repro.core import make_feature_map, registry
+    from repro.kernels.rm_attention import (rm_attention_causal,
+                                            rm_attention_fused_causal)
+
+    kern = make_kernel(shape.kernel)
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = interpret or not on_tpu
+    prec = resolve_precision(precision)
+    cd = prec.compute_dtype
+    ent = registry.get(est_name)
+    fm = make_feature_map(kern, shape.d, shape.F, jax.random.PRNGKey(0),
+                          estimator=est_name, measure="proportional")
+    b, h, t, d, dv = shape.batch, shape.heads, shape.T, shape.d, shape.dv
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = (jax.random.normal(kq, (b, h, t, d)) * 0.2).astype(cd)
+    k = (jax.random.normal(kk, (b, h, t, d)) * 0.2).astype(cd)
+    v = jax.random.normal(kv, (b, h, t, dv), jnp.float32)
+
+    def _two_launch(qq):
+        zq = fm.apply(qq.reshape(b * h * t, d), use_pallas=True,
+                      interpret=interpret, precision=precision)
+        zk = fm.apply(k.reshape(b * h * t, d), use_pallas=True,
+                      interpret=interpret, precision=precision)
+        return rm_attention_causal(zq.reshape(b, h, t, -1),
+                                   zk.reshape(b, h, t, -1), v,
+                                   chunk=shape.chunk, use_pallas=True,
+                                   interpret=interpret)
+
+    cell: Dict[str, float] = {
+        "output_dim": int(fm.output_dim),
+        "fused_supported": bool(ent.fused_attention_supported),
+        "two_launch_us": time_call(jax.jit(_two_launch), q,
+                                   repeats=repeats),
+    }
+    if ent.fused_attention_supported:
+        params = ({"omegas": fm.omegas} if hasattr(fm, "omegas")
+                  else fm.params)
+        w, col_deg, col_scale = ent.pack_fused(fm.plan, params)
+        w = jnp.asarray(w).astype(cd)
+        deg_t = tuple(int(x) for x in np.asarray(col_deg))
+        scale_t = tuple(float(x) for x in np.asarray(col_scale))
+        fused = jax.jit(lambda qq: rm_attention_fused_causal(
+            qq, k, v, w, deg_t, scale_t, chunk=shape.chunk,
+            use_pallas=True, interpret=interpret))
+        cell["fused_us"] = time_call(fused, q, repeats=repeats)
+    else:
+        cell["fused_us"] = cell["two_launch_us"]
+    cell["speedup"] = cell["two_launch_us"] / max(cell["fused_us"], 1e-9)
+    hbm = attention_hbm_bytes(est_name, fm.plan, shape, int(fm.output_dim),
+                              precision)
+    if not ent.fused_attention_supported:
+        hbm["hbm_bytes_fused"] = hbm["hbm_bytes_two_launch"]
+    cell.update(hbm)
+    return cell
+
+
 def _bucketed_us(shape: ShapeSpec, *, interpret: bool,
                  repeats: int) -> float:
     """Legacy one-launch-per-degree RM baseline (fp32), for the fused
@@ -208,6 +310,24 @@ def run_spec(
             entry["rm_fused_speedup"] = us / fused
             say(f"bench/{shape.label}/rm_bucketed,{us:.1f},"
                 f"{entry['rm_fused_speedup']:.3f}")
+
+    attn: Dict[str, Dict] = {}
+    for ashape in spec.attention_shapes:
+        entry = attn.setdefault(ashape.label, {
+            "kernel": ashape.kernel, "d": ashape.d, "F": ashape.F,
+            "heads": ashape.heads, "T": ashape.T, "dv": ashape.dv,
+            "batch": ashape.batch, "chunk": ashape.chunk, "cells": {},
+        })
+        for est in estimators:
+            for prec in spec.precisions:
+                cell = run_attention_cell(ashape, est, prec,
+                                          interpret=spec.interpret,
+                                          repeats=spec.repeats)
+                ck = cell_key(est, prec)
+                entry["cells"][ck] = cell
+                say(f"bench/attn/{ashape.label}/{ck},"
+                    f"{cell['fused_us']:.1f},{cell['two_launch_us']:.1f},"
+                    f"{cell['speedup']:.3f}")
     return {
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
@@ -216,6 +336,7 @@ def run_spec(
         "precisions": list(spec.precisions),
         "estimators": list(estimators),
         "results": results,
+        "fused_attention": attn,
     }
 
 
@@ -296,6 +417,52 @@ def autotune_cell(shape: ShapeSpec, est_name: str, precision: str,
     return None
 
 
+def autotune_attention_cell(shape: AttnShapeSpec, est_name: str,
+                            precision: str, *, interpret: bool,
+                            repeats: int = 3) -> Optional[tuple]:
+    """Autotune the fused featurize+attention launch for one cell.
+
+    Times the REAL fused causal kernel at every feasible (chunk, block_f)
+    ladder tile; the winner persists under the ``rm_attn_fused`` attention
+    cache key (``repro.kernels.common.attention_cache_key``) the fused
+    ops' default-block resolution reads. Families without a fused path
+    return None — there is nothing to tune.
+    """
+    from repro.core import make_feature_map, registry
+    from repro.kernels import common as kcommon
+    from repro.kernels.rm_attention import rm_attention_fused_causal
+
+    ent = registry.get(est_name)
+    if not ent.fused_attention_supported or ent.pack_fused is None:
+        return None
+    kern = make_kernel(shape.kernel)
+    interpret = interpret or jax.default_backend() != "tpu"
+    cd = resolve_precision(precision).compute_dtype
+    fm = make_feature_map(kern, shape.d, shape.F, jax.random.PRNGKey(0),
+                          estimator=est_name, measure="proportional")
+    b, h, t, d, dv = shape.batch, shape.heads, shape.T, shape.d, shape.dv
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = (jax.random.normal(kq, (b, h, t, d)) * 0.2).astype(cd)
+    k = (jax.random.normal(kk, (b, h, t, d)) * 0.2).astype(cd)
+    v = jax.random.normal(kv, (b, h, t, dv), jnp.float32)
+    params = {"omegas": fm.omegas} if hasattr(fm, "omegas") else fm.params
+    w, col_deg, col_scale = ent.pack_fused(fm.plan, params)
+    w = jnp.asarray(w).astype(cd)
+    deg_t = tuple(int(x) for x in np.asarray(col_deg))
+    scale_t = tuple(float(x) for x in np.asarray(col_scale))
+    if w.shape[0] == 0:
+        return None
+    launch = lambda c, bf: rm_attention_fused_causal(
+        q, k, v, w, deg_t, scale_t, chunk=c, block_f=bf,
+        use_pallas=True, interpret=interpret)
+    # key fields must mirror the fused ops' default-block lookup
+    # (_fused_defaults): d/depth/t from the q and w actually launched,
+    # f pre-padding, dv pinned to 0.
+    return kcommon.autotune_attention_blocks(
+        "rm_attn_fused", launch, d=d, depth=int(w.shape[0]), t=t,
+        f=int(w.shape[1]), dv=0, dtype=cd, repeats=repeats)
+
+
 def autotune_spec(spec: BenchSpec,
                   *, emit: Optional[Callable[[str], None]] = None,
                   estimators: Optional[Iterable[str]] = None) -> None:
@@ -311,4 +478,11 @@ def autotune_spec(spec: BenchSpec,
                 best = autotune_cell(shape, est, prec,
                                      interpret=spec.interpret)
                 say(f"autotune/{shape.label}/{cell_key(est, prec)},"
+                    f"{best}")
+    for ashape in spec.attention_shapes:
+        for est in names:
+            for prec in spec.precisions:
+                best = autotune_attention_cell(ashape, est, prec,
+                                               interpret=spec.interpret)
+                say(f"autotune/attn/{ashape.label}/{cell_key(est, prec)},"
                     f"{best}")

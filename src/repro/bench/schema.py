@@ -17,13 +17,16 @@ from typing import Dict, List, Optional, Sequence
 __all__ = [
     "SCHEMA_VERSION",
     "REQUIRED_CELL_KEYS",
+    "ATTN_REQUIRED_CELL_KEYS",
     "cell_key",
     "check_payload",
     "check_file",
     "diff_coverage",
 ]
 
-SCHEMA_VERSION = 1
+# v2: adds the required ``fused_attention`` section (fused featurize+
+# attention vs two-launch composition, DESIGN.md §13).
+SCHEMA_VERSION = 2
 
 # Every cell must carry these metrics (runner.run_cell emits a superset).
 REQUIRED_CELL_KEYS = (
@@ -36,7 +39,23 @@ REQUIRED_CELL_KEYS = (
     "bytes_moved",
 )
 
+# Every fused_attention cell must carry these. ``fused_supported`` mirrors
+# the registry capability flag: families without a fused attention path
+# (tensor_sketch, ctr) measure the two-launch fallback for BOTH timing
+# columns, so speedup == 1.0 there by construction.
+ATTN_REQUIRED_CELL_KEYS = (
+    "fused_us",
+    "two_launch_us",
+    "speedup",
+    "hbm_bytes_fused",
+    "hbm_bytes_two_launch",
+    "fused_supported",
+)
+
 _REQUIRED_SHAPE_KEYS = ("kernel", "d", "F", "batch", "cells")
+
+_REQUIRED_ATTN_SHAPE_KEYS = ("kernel", "d", "F", "heads", "T", "dv",
+                             "batch", "chunk", "cells")
 
 
 def cell_key(estimator: str, precision: str) -> str:
@@ -86,6 +105,32 @@ def check_payload(
                 for mk in REQUIRED_CELL_KEYS:
                     if mk not in cells[ck]:
                         errors.append(f"{label}/{ck}: missing metric {mk!r}")
+
+    # v2: the fused_attention section (fused vs two-launch per estimator x
+    # precision). Same coverage law as results: every registry family must
+    # have a cell — unsupported families report the fallback measurement
+    # with fused_supported=False rather than dropping out of the grid.
+    attn = payload.get("fused_attention")
+    if not isinstance(attn, dict) or not attn:
+        return errors + ["payload has no fused_attention section"]
+    for label, entry in attn.items():
+        for k in _REQUIRED_ATTN_SHAPE_KEYS:
+            if k not in entry:
+                errors.append(
+                    f"fused_attention/{label}: missing shape key {k!r}")
+        cells = entry.get("cells", {})
+        for est in estimators:
+            for prec in precisions:
+                ck = cell_key(est, prec)
+                if ck not in cells:
+                    errors.append(
+                        f"fused_attention/{label}: missing cell {ck}")
+                    continue
+                for mk in ATTN_REQUIRED_CELL_KEYS:
+                    if mk not in cells[ck]:
+                        errors.append(
+                            f"fused_attention/{label}/{ck}: "
+                            f"missing metric {mk!r}")
     return errors
 
 
@@ -122,15 +167,17 @@ def diff_coverage(committed: Dict, fresh: Dict) -> List[str]:
             f"{fresh.get('schema_version')!r}"
         )
 
-    def _cell_keys(payload: Dict):
+    def _cell_keys(payload: Dict, section: str):
         out = set()
-        for entry in (payload.get("results") or {}).values():
+        for entry in (payload.get(section) or {}).values():
             out.update(entry.get("cells") or {})
         return out
 
-    a, b = _cell_keys(committed), _cell_keys(fresh)
-    errors += [f"cell {c} covered in committed file but not in fresh run"
-               for c in sorted(a - b)]
-    errors += [f"cell {c} covered in fresh run but not in committed file"
-               for c in sorted(b - a)]
+    for section in ("results", "fused_attention"):
+        a = _cell_keys(committed, section)
+        b = _cell_keys(fresh, section)
+        errors += [f"{section} cell {c} covered in committed file but not "
+                   f"in fresh run" for c in sorted(a - b)]
+        errors += [f"{section} cell {c} covered in fresh run but not in "
+                   f"committed file" for c in sorted(b - a)]
     return errors

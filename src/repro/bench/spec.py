@@ -19,6 +19,7 @@ from typing import Tuple
 
 __all__ = [
     "ShapeSpec",
+    "AttnShapeSpec",
     "BenchSpec",
     "DEFAULT_PRECISIONS",
     "default_spec",
@@ -48,6 +49,28 @@ class ShapeSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AttnShapeSpec:
+    """One fused-attention benchmark shape (DESIGN.md §13).
+
+    ``d`` is the per-head q/k dim the feature map consumes, ``F`` the
+    feature budget, ``dv`` the value dim, ``(batch, heads, T)`` the
+    attention problem; ``chunk`` is the causal chunk length handed to both
+    the fused and the two-launch attention kernels so the comparison
+    isolates the Z(x) HBM round-trip, not a tiling choice.
+    """
+
+    label: str
+    kernel: str
+    d: int
+    F: int
+    heads: int
+    T: int
+    dv: int
+    batch: int = 1
+    chunk: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
 class BenchSpec:
     """The full grid for one benchmark run.
 
@@ -60,6 +83,7 @@ class BenchSpec:
     """
 
     shapes: Tuple[ShapeSpec, ...]
+    attention_shapes: Tuple[AttnShapeSpec, ...] = ()
     estimators: Tuple[str, ...] = ()
     precisions: Tuple[str, ...] = DEFAULT_PRECISIONS
     repeats: int = 5
@@ -99,11 +123,28 @@ _QUICK_SHAPES = (
               gram_points=32),
 )
 
+# Fused-attention shapes. The canonical grid mirrors serving-relevant
+# prefill problems (long-ish T, one-or-two feature tiles); the quick grid
+# keeps interpret-mode Pallas on a CPU runner tractable while still
+# exercising a multi-chunk, multi-feature-block launch.
+_DEFAULT_ATTN_SHAPES = (
+    AttnShapeSpec("attn_exp_d32_F128_T256", "exp", d=32, F=128, heads=2,
+                  T=256, dv=32, batch=1, chunk=32),
+    AttnShapeSpec("attn_poly7_d16_F128_T192", "poly7", d=16, F=128, heads=2,
+                  T=192, dv=16, batch=1, chunk=64),
+)
+
+_QUICK_ATTN_SHAPES = (
+    AttnShapeSpec("attn_poly7_d8_F64_T64", "poly7", d=8, F=64, heads=2,
+                  T=64, dv=8, batch=1, chunk=16),
+)
+
 
 def default_spec(*, interpret: bool = False, repeats: int = 5,
                  include_bucketed: bool = False) -> BenchSpec:
     """The committed-trajectory grid (BENCH_core.json)."""
-    return BenchSpec(shapes=_DEFAULT_SHAPES, repeats=repeats,
+    return BenchSpec(shapes=_DEFAULT_SHAPES,
+                     attention_shapes=_DEFAULT_ATTN_SHAPES, repeats=repeats,
                      interpret=interpret,
                      include_bucketed=include_bucketed)
 
@@ -113,6 +154,7 @@ def quick_spec(*, interpret: bool = True, repeats: int = 2,
     """The CI smoke grid: small shapes, full estimator x precision coverage
     (the bench-core job fails on missing cells, so quick mode still spans
     >= 3 shapes)."""
-    return BenchSpec(shapes=_QUICK_SHAPES, repeats=repeats,
+    return BenchSpec(shapes=_QUICK_SHAPES,
+                     attention_shapes=_QUICK_ATTN_SHAPES, repeats=repeats,
                      interpret=interpret,
                      include_bucketed=include_bucketed, quick=True)

@@ -13,8 +13,20 @@ from repro.common.dtypes import (
     canonical_dtype,
     resolve_precision,
 )
+from repro.common.env import (
+    add_xla_flags,
+    jax_enable_x64,
+    set_debug_nan,
+    set_host_device_count,
+    set_platform,
+)
 
 __all__ = [
+    "add_xla_flags",
+    "jax_enable_x64",
+    "set_debug_nan",
+    "set_host_device_count",
+    "set_platform",
     "tree_size",
     "tree_bytes",
     "tree_map_with_path",

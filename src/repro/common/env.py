@@ -1,0 +1,81 @@
+"""Computation-environment helpers: platform, XLA flags, host device count.
+
+One place for the process-level knobs every entry point (``python -m
+repro.bench``, ``launch/serve.py``, the distributed tests) otherwise
+re-implements ad hoc. All of these only take full effect when called BEFORE
+the jax backend initializes (i.e. before the first array op / device query),
+so CLIs call them first thing in ``main``.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from multiprocessing import cpu_count
+
+import jax
+
+__all__ = [
+    "set_platform",
+    "set_host_device_count",
+    "jax_enable_x64",
+    "set_debug_nan",
+    "add_xla_flags",
+]
+
+
+def add_xla_flags(flags: str) -> None:
+    """Append to ``XLA_FLAGS`` without clobbering flags already set."""
+    existing = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (existing + " " + flags).strip()
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin the jax platform ('cpu' | 'gpu' | 'tpu').
+
+    Only takes effect at the beginning of the program (before backend
+    init). On GPU also sets the standard XLA perf flags from the jax GPU
+    performance-tips page.
+    """
+    if platform not in ("cpu", "gpu", "tpu"):
+        raise ValueError(
+            f"platform must be 'cpu', 'gpu' or 'tpu'; got {platform!r}")
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        # https://jax.readthedocs.io/en/latest/gpu_performance_tips.html
+        add_xla_flags(
+            "--xla_gpu_triton_gemm_any=True "
+            "--xla_gpu_enable_latency_hiding_scheduler=true"
+        )
+
+
+def set_host_device_count(n: int) -> None:
+    """Expose ``n`` host (CPU) devices to jax via XLA_FLAGS.
+
+    The multi-device tests and data-parallel serving smoke runs use this to
+    build a mesh on one machine. Must run before backend init; warns and
+    clamps when asked for more than the physical core count.
+    """
+    n = int(n)
+    total = cpu_count()
+    if n > total:
+        warnings.warn(
+            f"only {total} CPUs available; using {total} host devices",
+            stacklevel=2)
+        n = total
+    add_xla_flags(f"--xla_force_host_platform_device_count={n}")
+
+
+def jax_enable_x64(use_x64: bool) -> None:
+    """Switch default array precision to 64-bit (or back to 32-bit).
+
+    Falls back to ``$JAX_ENABLE_X64`` when called with False, mirroring the
+    env-var behavior jax itself honors.
+    """
+    if not use_x64:
+        use_x64 = bool(os.getenv("JAX_ENABLE_X64", 0))
+    jax.config.update("jax_enable_x64", use_x64)
+
+
+def set_debug_nan(flag: bool) -> None:
+    """Raise on NaN production (jax debugging flag); expensive — debug only."""
+    jax.config.update("jax_debug_nans", flag)

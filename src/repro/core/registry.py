@@ -50,7 +50,18 @@ __all__ = [
 @dataclasses.dataclass(frozen=True)
 class Estimator:
     """One estimator family. ``make_map`` builds the convenience map object
-    (``RMFeatureMap`` / ``SketchFeatureMap``) used by offline consumers."""
+    (``RMFeatureMap`` / ``SketchFeatureMap``) used by offline consumers.
+
+    ``fused_attention_supported`` is the capability flag for the fused
+    featurize+attention kernels (kernels/rm_attention/fused.py): families
+    that can express their feature map as the packed masked-running-product
+    layout set it True and provide ``pack_fused(plan, params) ->
+    (w [max_degree, F, d], col_deg [F] np.int32, col_scale [F] np.float32)``
+    — the attention/MLA/serving layers featurize inside the attention
+    kernel's VMEM tiles. Families that can't (tensor_sketch's FFT
+    convolution, ctr's complex pair) leave the default False and the model
+    layers transparently fall back to the two-launch composition.
+    """
 
     name: str
     make_plan: Callable[..., Any]
@@ -59,6 +70,8 @@ class Estimator:
     make_map: Callable[..., Any]
     output_dim: Callable[[Any], int]
     truncation_bias: Callable[[Any, float], float]
+    fused_attention_supported: bool = False
+    pack_fused: Optional[Callable[..., Any]] = None
 
 
 _REGISTRY: Dict[str, Estimator] = {}
@@ -235,6 +248,16 @@ def _ctr_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
                           precision=precision)
 
 
+def _rm_pack_fused(plan, params):
+    """Protocol ``pack_fused`` for "rm": the packed ``[max_degree, F, d]``
+    omega tensor plus the per-column degree/scale vectors (host numpy —
+    they ride through the fused ops as jit-static tuples)."""
+    from repro.core.plan import pack_omegas
+
+    return (pack_omegas(plan, params["omegas"]), plan.column_degrees(),
+            plan.column_scales())
+
+
 def _make_rm_entry() -> Estimator:
     """Factory for the "rm" (Random Maclaurin, Kar & Karnick) entry."""
     from repro.core.feature_map import make_feature_map
@@ -248,6 +271,8 @@ def _make_rm_entry() -> Estimator:
         make_map=make_feature_map,
         output_dim=_plan_output_dim,
         truncation_bias=_plan_truncation_bias,
+        fused_attention_supported=True,
+        pack_fused=_rm_pack_fused,
     )
 
 

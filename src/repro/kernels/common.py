@@ -48,6 +48,12 @@ _BLOCK_LADDER = ((512, 256), (256, 256), (256, 128), (128, 128), (128, 64),
 # (tensor_sketch).
 _BATCH_LADDER = (512, 256, 128, 64, 32, 16, 8)
 
+# (chunk, block_f) ladder for the fused featurize+attention kernels
+# (kernels/rm_attention/fused.py): the chunk axis tiles the sequence, the
+# feature axis tiles the packed omega layout. Largest first.
+_ATTN_LADDER = ((256, 256), (128, 256), (128, 128), (64, 128), (64, 64),
+                (32, 64), (32, 32), (16, 16), (8, 8))
+
 
 def default_interpret() -> bool:
     """The one backend-detection rule for Pallas launches.
@@ -145,9 +151,38 @@ def block_cache_path() -> Path:
 
 def cache_key(kernel: str, d: int, depth: int, b: int, f: int,
               dtype) -> str:
-    """One cache row per (kernel family, shape, input dtype, backend)."""
+    """One cache row per (kernel family, shape, input dtype, backend).
+
+    Key schema (feature-map kernels, value ``[block_b, block_f]`` — the
+    batch-only-tiled kernels store ``[block_b, block_b]``)::
+
+        {kernel}/d{input_dim}/k{max_degree}/b{batch}/f{features}/{dtype}/{backend}
+
+    e.g. ``rm_feature/d64/k8/b4096/f256/float32/tpu``. The attention-fused
+    kernels use the richer :func:`attention_cache_key` schema; the two key
+    families share one JSON file (``$REPRO_BLOCK_CACHE``) and cannot
+    collide because the attention keys carry ``t{...}``/``v{...}`` fields.
+    """
     name = jnp.dtype(dtype).name
     return (f"{kernel}/d{d}/k{depth}/b{b}/f{f}/{name}/"
+            f"{jax.default_backend()}")
+
+
+def attention_cache_key(kernel: str, d: int, depth: int, t: int, f: int,
+                        dv: int, dtype) -> str:
+    """Cache row for the fused featurize+attention kernels.
+
+    Key schema (value is the measured ``[chunk, block_f]`` pair)::
+
+        {kernel}/d{head_dim}/k{max_degree}/t{seq_len}/f{features}/v{value_dim}/{dtype}/{backend}
+
+    e.g. ``rm_attn_fused/d64/k8/t1024/f256/v64/bfloat16/tpu``. ``t`` and
+    ``dv`` are part of the key because the score tile ([chunk, chunk]) and
+    the state scratch (f * dv) dominate the fused kernel's VMEM working
+    set, so the best tile genuinely shifts with them.
+    """
+    name = jnp.dtype(dtype).name
+    return (f"{kernel}/d{d}/k{depth}/t{t}/f{f}/v{dv}/{name}/"
             f"{jax.default_backend()}")
 
 
@@ -227,6 +262,131 @@ def get_batch_block(
         return int(hit[0])
     return pick_batch_block(d, depth, fs, b,
                             itemsize=dtype_itemsize(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused featurize+attention (chunk, feature-block) tiles
+# ---------------------------------------------------------------------------
+def _attention_working_set(d: int, depth: int, f: int, dv: int, c: int,
+                           bf: int, itemsize: int) -> int:
+    """VMEM bytes for one fused-attention program at tile (chunk=c, bf).
+
+    Streamed operands at input itemsize (q, k chunks + v chunk + the packed
+    omega block), fp32 live tiles (zq, zk, score [c, c], num/den), and the
+    fp32 state scratch over the WHOLE padded feature axis (it persists
+    across the chunk sweep — see fused.py docstring).
+    """
+    f_pad = round_up(max(f, 1), bf)
+    streamed = itemsize * (2 * c * d + c * dv + depth * bf * d)
+    live = 4 * (2 * c * bf + c * c + c * dv + c)
+    state = 4 * (f_pad * dv + f_pad)
+    return streamed + live + state
+
+
+def pick_attention_blocks(
+    d: int,
+    depth: int,
+    t: int,
+    f: int,
+    dv: int,
+    *,
+    itemsize: int = 4,
+) -> Tuple[int, int]:
+    """Largest feasible (chunk, block_f) for the fused attention kernels."""
+    for c, bf in _ATTN_LADDER:
+        if c > max(t, 8) * 2 or bf > max(f, 8) * 2:
+            continue
+        if _attention_working_set(d, depth, f, dv, c, bf,
+                                  itemsize) <= VMEM_BUDGET:
+            return c, bf
+    return 8, 8
+
+
+def feasible_attention_blocks(
+    d: int,
+    depth: int,
+    t: int,
+    f: int,
+    dv: int,
+    *,
+    itemsize: int = 4,
+) -> Tuple[Tuple[int, int], ...]:
+    """Ladder candidates whose fused-attention working set fits VMEM."""
+    out = []
+    for c, bf in _ATTN_LADDER:
+        if c > max(t, 8) * 2 or bf > max(f, 8) * 2:
+            continue
+        if _attention_working_set(d, depth, f, dv, c, bf,
+                                  itemsize) <= VMEM_BUDGET:
+            out.append((c, bf))
+    return tuple(out) or ((8, 8),)
+
+
+def get_attention_blocks(
+    kernel: str,
+    *,
+    d: int,
+    depth: int,
+    t: int,
+    f: int,
+    dv: int,
+    dtype=jnp.float32,
+) -> Tuple[int, int]:
+    """Measured (chunk, block_f) if cached, else the VMEM heuristic.
+
+    Same contract as ``get_feature_blocks``: a pure host-side dict read
+    keyed by :func:`attention_cache_key`, safe at trace time; measurement
+    only happens via :func:`autotune_attention_blocks`.
+    """
+    hit = load_block_cache().get(
+        attention_cache_key(kernel, d, depth, t, f, dv, dtype))
+    if hit is not None and len(hit) == 2:
+        return int(hit[0]), int(hit[1])
+    return pick_attention_blocks(d, depth, t, f, dv,
+                                 itemsize=dtype_itemsize(dtype))
+
+
+def autotune_attention_blocks(
+    kernel: str,
+    launch: Callable[[int, int], object],
+    *,
+    d: int,
+    depth: int,
+    t: int,
+    f: int,
+    dv: int,
+    dtype=jnp.float32,
+    candidates: Optional[Iterable[Tuple[int, int]]] = None,
+    repeats: int = 3,
+    path: Optional[Path] = None,
+) -> Tuple[int, int]:
+    """Measured-ladder tune for the fused attention kernels.
+
+    ``launch(chunk, block_f)`` must run the real fused kernel end-to-end;
+    the median-of-``repeats`` winner is persisted under
+    :func:`attention_cache_key` in the same ``$REPRO_BLOCK_CACHE`` file the
+    feature-map kernels use. Host-side offline pass only (driven by
+    ``python -m repro.bench --autotune``).
+    """
+    cands = tuple(candidates) if candidates is not None else \
+        feasible_attention_blocks(d, depth, t, f, dv,
+                                  itemsize=dtype_itemsize(dtype))
+    best, best_t = None, float("inf")
+    for c, bf in cands:
+        try:
+            tm = _median_seconds(lambda: launch(c, bf), repeats)
+        except Exception:  # infeasible tile (e.g. VMEM OOM on TPU): skip
+            continue
+        if tm < best_t:
+            best, best_t = (c, bf), tm
+    if best is None:
+        best = pick_attention_blocks(d, depth, t, f, dv,
+                                     itemsize=dtype_itemsize(dtype))
+    cache = dict(load_block_cache(path))
+    cache[attention_cache_key(kernel, d, depth, t, f, dv, dtype)] = \
+        list(best)
+    save_block_cache(cache, path)
+    return best
 
 
 # ---------------------------------------------------------------------------

@@ -2,10 +2,18 @@ from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_noncausal,
     rm_attention_decode_step,
+    rm_attention_fused_causal,
+    rm_attention_fused_noncausal,
+    rm_attention_fused_prefill,
+    rm_attention_fused_decode_step,
 )
 
 __all__ = [
     "rm_attention_causal",
     "rm_attention_noncausal",
     "rm_attention_decode_step",
+    "rm_attention_fused_causal",
+    "rm_attention_fused_noncausal",
+    "rm_attention_fused_prefill",
+    "rm_attention_fused_decode_step",
 ]

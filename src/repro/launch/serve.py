@@ -62,11 +62,27 @@ def main(argv=None):
     ap.add_argument("--data-parallel", action="store_true",
                     help="decode over a host mesh (DP slots, replicated "
                          "params)")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="pin the jax platform before backend init "
+                         "(repro.common.env.set_platform)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="expose N host CPU devices via XLA_FLAGS (for "
+                         "--data-parallel on one machine)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     args = ap.parse_args(argv)
+
+    # platform knobs must land before the first device query initializes
+    # the backend (repro.common.env docstring)
+    from repro.common import env
+
+    if args.host_devices:
+        env.set_host_device_count(args.host_devices)
+    if args.platform:
+        env.set_platform(args.platform)
 
     mesh = None
     if args.data_parallel:

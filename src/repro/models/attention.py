@@ -24,6 +24,9 @@ from repro.core.maclaurin import ExponentialDotProductKernel
 from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_decode_step,
+    rm_attention_fused_causal,
+    rm_attention_fused_noncausal,
+    rm_attention_fused_prefill,
     rm_attention_noncausal,
     rm_attention_prefill_final_state,
 )
@@ -90,6 +93,66 @@ def _rm_featurize(
     z = rm_estimator(cfg).apply(meta, params["rm_est"], xhat * scale,
                                 precision=cfg.rm.precision)
     return jnp.transpose(z, (0, 2, 1, 3))  # [B, H, T, F]
+
+
+def rm_fuse_enabled(cfg: ModelConfig) -> bool:
+    """Whether the rm attention path runs the fused featurize+attention ops.
+
+    ``cfg.rm.fuse_featurize``: "off" -> never; "on" -> always (off-TPU the
+    fused ops run their jnp composition); "auto" -> only where the Pallas
+    kernels compile (TPU). Estimators without the
+    ``fused_attention_supported`` capability always take the two-launch
+    path — the flag is the registry-level fallback contract.
+    """
+    mode = cfg.rm.fuse_featurize
+    if mode not in ("auto", "on", "off"):
+        raise ValueError(
+            f"cfg.rm.fuse_featurize must be 'auto', 'on' or 'off'; "
+            f"got {mode!r}")
+    if mode == "off":
+        return False
+    if not rm_estimator(cfg).fused_attention_supported:
+        return False
+    if mode == "on":
+        return True
+    from repro.kernels.common import default_interpret
+
+    return not default_interpret()
+
+
+def _rm_scaled_qk(params: Params, cfg: ModelConfig, x: jax.Array):
+    """[B, T, H, dh] -> [B, H, T, dh]: the pre-featurize transform.
+
+    EXACTLY the normalize+scale step of ``_rm_featurize`` — the fused
+    attention kernels take these raw rows and featurize them in VMEM.
+    """
+    xf = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(xf, axis=-1, keepdims=True)
+    xhat = xf / jnp.maximum(norm, 1e-6)
+    if cfg.rm.learnable_scale:
+        scale = jax.nn.softplus(params["rm_scale"]).astype(jnp.float32)
+    else:
+        scale = jnp.float32(cfg.rm.qk_scale)
+    return jnp.transpose(xhat * scale, (0, 2, 1, 3))
+
+
+def _rm_fused_operands(params: Params, cfg: ModelConfig, meta, q, k):
+    """Packed layout + precision-cast operands for the fused ops.
+
+    Returns ``(qs, ks, w, col_deg, col_scale)`` with q/k pre-scaled
+    [B, H, T, dh] and w the packed ``[max_degree, F, dh]`` omegas, all cast
+    to the precision policy's compute dtype (accumulation stays fp32 inside
+    the kernels).
+    """
+    from repro.common.dtypes import resolve_precision
+
+    w, col_deg, col_scale = rm_estimator(cfg).pack_fused(
+        meta, params["rm_est"])
+    prec = resolve_precision(cfg.rm.precision)
+    dt = prec.compute_dtype
+    qs = _rm_scaled_qk(params, cfg, q).astype(dt)
+    ks = _rm_scaled_qk(params, cfg, k).astype(dt)
+    return qs, ks, w.astype(dt), col_deg, col_scale
 
 
 # ---------------------------------------------------------------------------
@@ -277,15 +340,23 @@ def attention_forward(
 
     if cfg.attention_mode == "rm":
         meta = rm_plan_for(cfg, dh)
-        zq = _rm_featurize(params, cfg, meta, q)
-        zk = _rm_featurize(params, cfg, meta, k)
         v_t = jnp.transpose(v, (0, 2, 1, 3))  # [B,H,T,dv]
-        if cfg.causal:
-            out = rm_attention_causal(
-                zq, zk, v_t, chunk=cfg.rm.chunk, eps=cfg.rm.eps
-            )
+        if rm_fuse_enabled(cfg):
+            # fused path: q/k go in RAW (pre-scaled); Z never touches HBM
+            qs, ks, w, cd, cs = _rm_fused_operands(params, cfg, meta, q, k)
+            fused_op = (rm_attention_fused_causal if cfg.causal
+                        else rm_attention_fused_noncausal)
+            out = fused_op(qs, ks, v_t, w, cd, cs, chunk=cfg.rm.chunk,
+                           eps=cfg.rm.eps)
         else:
-            out = rm_attention_noncausal(zq, zk, v_t, eps=cfg.rm.eps)
+            zq = _rm_featurize(params, cfg, meta, q)
+            zk = _rm_featurize(params, cfg, meta, k)
+            if cfg.causal:
+                out = rm_attention_causal(
+                    zq, zk, v_t, chunk=cfg.rm.chunk, eps=cfg.rm.eps
+                )
+            else:
+                out = rm_attention_noncausal(zq, zk, v_t, eps=cfg.rm.eps)
         out = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
     else:
         out = _softmax_attention(cfg, q, k, v, positions, positions)
@@ -331,12 +402,24 @@ def attention_decode(
         meta = rm_plan_for(cfg, dh)
         k = _repeat_kv(k, cfg.q_per_kv)
         v = _repeat_kv(v, cfg.q_per_kv)
-        zq = _rm_featurize(params, cfg, meta, q)[:, :, 0]  # [B,H,F]
-        zk = _rm_featurize(params, cfg, meta, k)[:, :, 0]
         v0 = jnp.transpose(v, (0, 2, 1, 3))[:, :, 0]       # [B,H,dv]
-        out, s_new, n_new = rm_attention_decode_step(
-            zq, zk, v0, cache["rm_s"], cache["rm_n"], eps=cfg.rm.eps
-        )
+        if rm_fuse_enabled(cfg):
+            # one featurize launch per token (q and k ride together)
+            # instead of two — see rm_attention_fused_decode_step
+            from repro.kernels.rm_attention.ops import (
+                rm_attention_fused_decode_step,
+            )
+
+            qs, ks, w, cd, cs = _rm_fused_operands(params, cfg, meta, q, k)
+            out, s_new, n_new = rm_attention_fused_decode_step(
+                qs[:, :, 0], ks[:, :, 0], v0, cache["rm_s"], cache["rm_n"],
+                w, cd, cs, eps=cfg.rm.eps)
+        else:
+            zq = _rm_featurize(params, cfg, meta, q)[:, :, 0]  # [B,H,F]
+            zk = _rm_featurize(params, cfg, meta, k)[:, :, 0]
+            out, s_new, n_new = rm_attention_decode_step(
+                zq, zk, v0, cache["rm_s"], cache["rm_n"], eps=cfg.rm.eps
+            )
         y = out[:, None].reshape(b, 1, h * dh).astype(x.dtype) @ params["wo"]
         return y, {"rm_s": s_new, "rm_n": n_new}
 
@@ -384,14 +467,26 @@ def attention_prefill_cache(
         meta = rm_plan_for(cfg, dh)
         kr = _repeat_kv(k, cfg.q_per_kv)
         vr = _repeat_kv(v, cfg.q_per_kv)
-        zq = _rm_featurize(params, cfg, meta, q)
-        # padded prompt positions (bucketed prefill) must not pollute the
-        # prefix sums or the O(1) decode state
-        zk = rm_valid_mask(_rm_featurize(params, cfg, meta, kr), positions)
         v_t = jnp.transpose(vr, (0, 2, 1, 3))
-        out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
-                                  eps=cfg.rm.eps)
-        s, n = rm_attention_prefill_final_state(zk, v_t)
+        if rm_fuse_enabled(cfg):
+            # fused prefill: causal outputs AND the O(1) decode state from
+            # ONE launch (the kernel's state scratch holds the full-prefix
+            # state after the last chunk); padded prompt positions are
+            # masked via kvalid instead of zeroing a materialized Z(k)
+            qs, ks, w, cd, cs = _rm_fused_operands(params, cfg, meta, q, kr)
+            kvalid = (positions >= 0).astype(jnp.float32)
+            out, s, n = rm_attention_fused_prefill(
+                qs, ks, v_t, w, cd, cs, kvalid=kvalid, chunk=cfg.rm.chunk,
+                eps=cfg.rm.eps)
+        else:
+            zq = _rm_featurize(params, cfg, meta, q)
+            # padded prompt positions (bucketed prefill) must not pollute
+            # the prefix sums or the O(1) decode state
+            zk = rm_valid_mask(_rm_featurize(params, cfg, meta, kr),
+                               positions)
+            out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
+                                      eps=cfg.rm.eps)
+            s, n = rm_attention_prefill_final_state(zk, v_t)
         y = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
         y = y.reshape(b, t, h * dh) @ params["wo"]
         return y, {"rm_s": s, "rm_n": n}

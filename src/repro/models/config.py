@@ -37,10 +37,20 @@ class RMAttentionConfig:
     featurization kernels take bf16 inputs/packed weights with fp32
     accumulation (repro.common.dtypes.Precision), halving the featurize
     HBM traffic in attention/MLA prefill and decode.
+
+    ``fuse_featurize`` selects the fused featurize+attention path
+    (DESIGN.md §13), which computes Z(q)/Z(k) inside the attention
+    kernel's VMEM tiles instead of materializing them to HBM between two
+    launches: ``"auto"`` (default) fuses when the Pallas kernels compile
+    (TPU) and keeps the two-launch path elsewhere; ``"on"`` always uses the
+    fused formulation (off-TPU it runs the fused jnp composition — useful
+    for parity tests); ``"off"`` always two-launch. Estimators without
+    ``fused_attention_supported`` fall back to two-launch regardless.
     """
 
     estimator: str = "rm"
     precision: str = "fp32"
+    fuse_featurize: str = "auto"
     num_features: int = 256
     sigma2: float = 1.0
     qk_scale: float = 1.0

@@ -16,14 +16,19 @@ import jax.numpy as jnp
 from repro.kernels.rm_attention.ops import (
     rm_attention_causal,
     rm_attention_decode_step,
+    rm_attention_fused_causal,
+    rm_attention_fused_decode_step,
+    rm_attention_fused_prefill,
     rm_attention_prefill_final_state,
 )
 from repro.models.attention import (
     NEG_INF,
     rm_estimator,
+    rm_fuse_enabled,
     rm_plan_for,
     rm_valid_mask,
     _rm_featurize,
+    _rm_fused_operands,
 )
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, normal_init
@@ -98,11 +103,17 @@ def mla_forward(params: Params, cfg: ModelConfig, x, positions) -> jax.Array:
 
     if cfg.attention_mode == "rm":
         meta = rm_plan_for(cfg, m.qk_nope_head_dim + m.qk_rope_head_dim)
-        zq = _rm_featurize(params, cfg, meta, q)
-        zk = _rm_featurize(params, cfg, meta, k)
         v_t = jnp.transpose(v, (0, 2, 1, 3))
-        out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
-                                  eps=cfg.rm.eps)
+        if rm_fuse_enabled(cfg):
+            qs, ks, w, cd, cs = _rm_fused_operands(params, cfg, meta, q, k)
+            out = rm_attention_fused_causal(qs, ks, v_t, w, cd, cs,
+                                            chunk=cfg.rm.chunk,
+                                            eps=cfg.rm.eps)
+        else:
+            zq = _rm_featurize(params, cfg, meta, q)
+            zk = _rm_featurize(params, cfg, meta, k)
+            out = rm_attention_causal(zq, zk, v_t, chunk=cfg.rm.chunk,
+                                      eps=cfg.rm.eps)
         out = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
     else:
         # blockwise online-softmax for long sequences (see attention.py)
@@ -138,6 +149,20 @@ def mla_prefill_cache(
     """Prefill forward + build the decode cache (latent or RM state)."""
     m = cfg.mla
     b, t, _ = x.shape
+    if cfg.attention_mode == "rm" and rm_fuse_enabled(cfg):
+        # fused prefill: one launch yields the causal outputs AND the O(1)
+        # decode state (padded positions masked via kvalid in-kernel)
+        q, k, v, _, _ = _mla_qkv(params, cfg, x, positions)
+        meta = rm_plan_for(cfg, m.qk_nope_head_dim + m.qk_rope_head_dim)
+        qs, ks, w, cd, cs = _rm_fused_operands(params, cfg, meta, q, k)
+        v_t = jnp.transpose(v, (0, 2, 1, 3))
+        kvalid = (positions >= 0).astype(jnp.float32)
+        out, s, n = rm_attention_fused_prefill(
+            qs, ks, v_t, w, cd, cs, kvalid=kvalid, chunk=cfg.rm.chunk,
+            eps=cfg.rm.eps)
+        y = jnp.transpose(out, (0, 2, 1, 3)).astype(x.dtype)
+        y = y.reshape(b, t, cfg.num_heads * m.v_head_dim) @ params["w_o"]
+        return y, {"rm_s": s, "rm_n": n}
     y = mla_forward(params, cfg, x, positions)
     if cfg.attention_mode == "rm":
         q, k, v, _, _ = _mla_qkv(params, cfg, x, positions)
@@ -168,12 +193,19 @@ def mla_decode(
 
     if cfg.attention_mode == "rm":
         meta = rm_plan_for(cfg, nope + rope)
-        zq = _rm_featurize(params, cfg, meta, q)[:, :, 0]
-        zk = _rm_featurize(params, cfg, meta, k)[:, :, 0]
         v0 = jnp.transpose(v, (0, 2, 1, 3))[:, :, 0]
-        out, s_new, n_new = rm_attention_decode_step(
-            zq, zk, v0, cache["rm_s"], cache["rm_n"], eps=cfg.rm.eps
-        )
+        if rm_fuse_enabled(cfg):
+            # q and k share one featurize launch per decoded token
+            qs, ks, w, cd, cs = _rm_fused_operands(params, cfg, meta, q, k)
+            out, s_new, n_new = rm_attention_fused_decode_step(
+                qs[:, :, 0], ks[:, :, 0], v0, cache["rm_s"], cache["rm_n"],
+                w, cd, cs, eps=cfg.rm.eps)
+        else:
+            zq = _rm_featurize(params, cfg, meta, q)[:, :, 0]
+            zk = _rm_featurize(params, cfg, meta, k)[:, :, 0]
+            out, s_new, n_new = rm_attention_decode_step(
+                zq, zk, v0, cache["rm_s"], cache["rm_n"], eps=cfg.rm.eps
+            )
         y = out.reshape(b, 1, h * dv).astype(x.dtype) @ params["w_o"]
         return y, {"rm_s": s_new, "rm_n": n_new}
 

@@ -82,14 +82,22 @@ class ServingEngine:
         # not deep inside the first jitted prefill. RM/sketch lane state is
         # O(1) either way (plan.output_dim fixes the state shapes).
         self.estimator = None
+        self.fused_attention = False
         if cfg.attention_mode == "rm":
             from repro.common.dtypes import resolve_precision
             from repro.core import registry
+            from repro.models.attention import rm_fuse_enabled
 
             self.estimator = registry.get(cfg.rm.estimator).name
             # Same fail-early rule for the feature-kernel precision policy:
             # a typo'd cfg.rm.precision raises here with the valid names.
             resolve_precision(cfg.rm.precision)
+            # ... and for the fusion mode: rm_fuse_enabled validates
+            # cfg.rm.fuse_featurize and resolves the estimator capability
+            # flag. When True, prefill emits outputs + decode state from ONE
+            # fused launch and each decode step runs ONE featurize launch
+            # for q and k together (docs/serving.md).
+            self.fused_attention = rm_fuse_enabled(cfg)
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots

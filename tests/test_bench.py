@@ -14,6 +14,7 @@ from pathlib import Path
 import pytest
 
 from repro.bench import (
+    AttnShapeSpec,
     BenchSpec,
     ShapeSpec,
     analytic_cost,
@@ -31,6 +32,8 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 _MICRO = BenchSpec(
     shapes=(ShapeSpec("micro_exp", "exp", d=4, F=16, batch=8,
                       gram_points=6),),
+    attention_shapes=(AttnShapeSpec("micro_attn", "exp", d=4, F=16,
+                                    heads=1, T=16, dv=4, batch=1, chunk=8),),
     repeats=1,
     interpret=True,
     quick=True,
@@ -58,6 +61,23 @@ def test_run_spec_full_coverage(micro_payload):
             assert cell["gram_rmse"] >= 0
             assert cell["flops"] > 0 and cell["bytes_moved"] > 0
 
+    attn_cells = payload["fused_attention"]["micro_attn"]["cells"]
+    for est in registry.list_estimators():
+        supported = registry.get(est).fused_attention_supported
+        for prec in ("fp32", "bf16"):
+            cell = attn_cells[cell_key(est, prec)]
+            assert cell["fused_us"] > 0 and cell["two_launch_us"] > 0
+            assert cell["speedup"] > 0
+            assert cell["fused_supported"] == supported
+            if supported:
+                # the removed Z(x) round-trip shows up in the analytic bytes
+                assert (cell["hbm_bytes_fused"]
+                        < cell["hbm_bytes_two_launch"])
+            else:
+                assert (cell["hbm_bytes_fused"]
+                        == cell["hbm_bytes_two_launch"])
+                assert cell["speedup"] == 1.0
+
 
 def test_payload_is_json_round_trippable(micro_payload, tmp_path):
     payload, _ = micro_payload
@@ -78,6 +98,22 @@ def test_coverage_gate_catches_missing_cells(micro_payload):
     # symmetric direction
     diffs_rev = diff_coverage(broken, payload)
     assert any(removed in d for d in diffs_rev)
+
+
+def test_coverage_gate_catches_missing_attention_cells(micro_payload):
+    """Schema v2: losing a fused_attention cell (or the whole section)
+    fails both the payload check and the cross-artifact diff."""
+    payload, _ = micro_payload
+    broken = json.loads(json.dumps(payload))
+    removed = cell_key("rm", "fp32")
+    del broken["fused_attention"]["micro_attn"]["cells"][removed]
+    errs = check_payload(broken, min_shapes=1)
+    assert any("fused_attention" in e and removed in e for e in errs)
+    assert any("fused_attention" in d and removed in d
+               for d in diff_coverage(payload, broken))
+    gone = dict(payload, fused_attention={})
+    assert any("fused_attention" in e
+               for e in check_payload(gone, min_shapes=1))
 
 
 def test_schema_rejects_wrong_version(micro_payload):
@@ -116,6 +152,8 @@ def test_quick_spec_meets_ci_coverage_floor():
     spec = quick_spec()
     assert len(spec.shapes) >= 3
     assert set(spec.precisions) >= {"fp32", "bf16"}
+    # schema v2: quick mode must also cover the fused_attention section
+    assert len(spec.attention_shapes) >= 1
 
 
 def test_committed_bench_core_artifact_passes_gate():

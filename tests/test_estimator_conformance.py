@@ -100,6 +100,70 @@ def test_pallas_interpret_matches_reference(name):
                                rtol=1e-5, atol=1e-5)
 
 
+# which families currently carry the fused featurize+attention capability
+# (kernels/rm_attention/fused.py). A new registry entry missing from this
+# map only has to satisfy the generic contract below.
+_EXPECTED_FUSED_ATTENTION = {"rm": True, "tensor_sketch": False,
+                             "ctr": False}
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_fused_attention_capability_contract(name):
+    """``fused_attention_supported`` and ``pack_fused`` travel together, and
+    the packed tensors satisfy the layout the fused attention kernels
+    consume: w [max_degree, F, d], per-column degree <= max_degree, finite
+    scales. Families without the capability must leave pack_fused unset so
+    the model layers' fallback test is a single flag read."""
+    est, plan, params = _build(name)
+    if name in _EXPECTED_FUSED_ATTENTION:
+        assert est.fused_attention_supported == _EXPECTED_FUSED_ATTENTION[
+            name]
+    if not est.fused_attention_supported:
+        assert est.pack_fused is None
+        return
+    assert est.pack_fused is not None
+    w, col_deg, col_scale = est.pack_fused(plan, params)
+    w = jnp.asarray(w)
+    deg = np.asarray(col_deg)
+    sc = np.asarray(col_scale, dtype=np.float64)
+    assert w.ndim == 3
+    assert w.shape[2] == 10                    # input_dim from _build
+    assert deg.shape == (w.shape[1],)
+    assert sc.shape == (w.shape[1],)
+    assert int(deg.max()) <= w.shape[0]
+    assert int(deg.min()) >= 0
+    assert np.isfinite(sc).all()
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_fused_attention_matches_two_launch(name):
+    """For capable families, the fused causal op over the packed tensors
+    matches featurize-then-attend at 1e-5; incapable families are exactly
+    the ones the model layers route to the two-launch composition."""
+    from repro.kernels.rm_attention import (rm_attention_causal,
+                                            rm_attention_fused_causal)
+
+    est, plan, params = _build(name)
+    if not est.fused_attention_supported:
+        pytest.skip(f"{name} takes the two-launch fallback by contract")
+    w, col_deg, col_scale = est.pack_fused(plan, params)
+    w = jnp.asarray(w)
+    b, h, t, dv = 1, 2, 24, 6
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(21), 3)
+    q = jax.random.normal(kq, (b, h, t, 10)) * 0.3
+    k = jax.random.normal(kk, (b, h, t, 10)) * 0.3
+    v = jax.random.normal(kv, (b, h, t, dv))
+    got = rm_attention_fused_causal(q, k, v, w, col_deg, col_scale,
+                                    chunk=8, use_pallas=True,
+                                    interpret=True)
+    z = est.apply(plan, params, jnp.concatenate([q, k], axis=0),
+                  use_pallas=False)
+    zq, zk = z[:b], z[b:]
+    want = rm_attention_causal(zq, zk, v, chunk=8, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("name", ESTIMATORS)
 def test_truncation_bias_monotone_in_n_max(name):
     est = registry.get(name)

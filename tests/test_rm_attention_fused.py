@@ -1,0 +1,331 @@
+"""Fused featurize+attention kernels vs the two-launch composition.
+
+The fused ops (kernels/rm_attention/fused.py, DESIGN.md §13) compute
+``rm_attention_*(Z(q), Z(k), v)`` without ever materializing Z in HBM.
+Contracts held here:
+
+* parity at 1e-5 against BOTH the two-launch Pallas composition
+  (featurize launches + attention launch) and the jnp oracle — causal,
+  noncausal, prefill (outputs AND final state) and the decode step;
+* bf16-in / fp32-accum: the in-VMEM featurize and the state accumulation
+  keep fp32 accumulators under the bf16 precision policy (adversarial
+  2^-9 probe, same discipline as tests/test_precision.py);
+* edge shapes: batch=0, one-tile F, chunk > T, T=1;
+* kvalid masks padded keys out of scores and state;
+* gradients flow (custom VJP over the chunked-XLA formulation);
+* model level: ``cfg.rm.fuse_featurize`` "on" matches "off", and the
+  serving engine validates/reports the flag.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExponentialDotProductKernel, make_feature_map, registry
+from repro.kernels.rm_attention import (
+    rm_attention_causal,
+    rm_attention_decode_step,
+    rm_attention_fused_causal,
+    rm_attention_fused_decode_step,
+    rm_attention_fused_noncausal,
+    rm_attention_fused_prefill,
+    rm_attention_noncausal,
+)
+from repro.kernels.rm_attention.ops import rm_attention_prefill_final_state
+
+KERN = ExponentialDotProductKernel(1.0)
+
+
+def _setup(d=12, F=96, seed=0):
+    """Feature map + packed fused tensors for the rm registry entry."""
+    fm = make_feature_map(KERN, d, F, jax.random.PRNGKey(seed),
+                          measure="proportional")
+    est = registry.get("rm")
+    w, col_deg, col_scale = est.pack_fused(fm.plan, {"omegas": fm.omegas})
+    return fm, jnp.asarray(w), col_deg, col_scale
+
+
+def _qkv(key, b, h, t, d, dv, scale=0.3):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, t, d)) * scale
+    k = jax.random.normal(kk, (b, h, t, d)) * scale
+    v = jax.random.normal(kv, (b, h, t, dv))
+    return q, k, v
+
+
+def _featurize(fm, x, **kw):
+    b, h, t, d = x.shape
+    return fm.apply(x.reshape(-1, d), **kw).reshape(b, h, t, -1)
+
+
+SHAPES = [
+    # (b, h, t, d, dv, chunk)
+    (1, 1, 16, 8, 8, 8),
+    (2, 2, 48, 12, 8, 16),
+    (1, 2, 37, 12, 4, 16),    # t not divisible by chunk
+]
+
+
+@pytest.mark.parametrize("b,h,t,d,dv,chunk", SHAPES)
+def test_fused_causal_matches_two_launch_and_oracle(b, h, t, d, dv, chunk):
+    fm, w, deg, sc = _setup(d=d)
+    q, k, v = _qkv(jax.random.PRNGKey(t), b, h, t, d, dv)
+    got = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=chunk,
+                                    use_pallas=True, interpret=True)
+    # two-launch Pallas composition: featurize launches + attention launch
+    zq = _featurize(fm, q, use_pallas=True, interpret=True)
+    zk = _featurize(fm, k, use_pallas=True, interpret=True)
+    two = rm_attention_causal(zq, zk, v, chunk=chunk, use_pallas=True,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(two),
+                               rtol=1e-5, atol=1e-5)
+    # jnp oracle (also the custom-VJP backward formulation)
+    oracle = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=chunk,
+                                       use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,t,d,dv,chunk", SHAPES)
+def test_fused_noncausal_matches_two_launch(b, h, t, d, dv, chunk):
+    fm, w, deg, sc = _setup(d=d)
+    q, k, v = _qkv(jax.random.PRNGKey(100 + t), b, h, t, d, dv)
+    got = rm_attention_fused_noncausal(q, k, v, w, deg, sc, chunk=chunk,
+                                       use_pallas=True, interpret=True)
+    zq = _featurize(fm, q, use_pallas=False)
+    zk = _featurize(fm, k, use_pallas=False)
+    want = rm_attention_noncausal(zq, zk, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_prefill_outputs_and_state():
+    """One launch yields causal outputs AND the whole-prefix decode state."""
+    fm, w, deg, sc = _setup()
+    b, h, t, d, dv = 1, 2, 40, 12, 8
+    q, k, v = _qkv(jax.random.PRNGKey(7), b, h, t, d, dv)
+    out, s, n = rm_attention_fused_prefill(q, k, v, w, deg, sc, chunk=16,
+                                           use_pallas=True, interpret=True)
+    zq = _featurize(fm, q, use_pallas=False)
+    zk = _featurize(fm, k, use_pallas=False)
+    want_out = rm_attention_causal(zq, zk, v, chunk=16, use_pallas=False)
+    want_s, want_n = rm_attention_prefill_final_state(zk, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_out),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want_s),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(want_n),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_decode_step_matches_two_launch_decode():
+    """Fused decode (one featurize launch for q+k) == featurize-then-update;
+    decoding from a fused-prefill state tracks the full causal oracle."""
+    fm, w, deg, sc = _setup()
+    b, h, t, d, dv = 1, 2, 24, 12, 8
+    q, k, v = _qkv(jax.random.PRNGKey(9), b, h, t + 4, d, dv)
+    zq = _featurize(fm, q, use_pallas=False)
+    zk = _featurize(fm, k, use_pallas=False)
+    full = rm_attention_causal(zq, zk, v, chunk=8, use_pallas=False)
+
+    _, s, n = rm_attention_fused_prefill(
+        q[:, :, :t], k[:, :, :t], v[:, :, :t], w, deg, sc, chunk=8,
+        use_pallas=True, interpret=True)
+    s2, n2 = jnp.asarray(s), jnp.asarray(n)
+    for i in range(4):
+        o, s, n = rm_attention_fused_decode_step(
+            q[:, :, t + i], k[:, :, t + i], v[:, :, t + i], s, n,
+            w, deg, sc, use_pallas=True, interpret=True)
+        o2, s2, n2 = rm_attention_decode_step(
+            zq[:, :, t + i], zk[:, :, t + i], v[:, :, t + i], s2, n2)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(full[:, :, t + i]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bf16-in / fp32-accum
+# ---------------------------------------------------------------------------
+_VAL = 2.0 ** -9   # exact in bf16; 4096 * _VAL = 8.0 only under fp32 accum
+
+
+def test_fused_attention_accumulates_fp32():
+    """All-ones depth-1 probe: each feature is a 4096-term sum of 2^-9
+    (exactly 8.0 under fp32 accumulation, stalls near 1.0 under bf16), and
+    the state rows sum 16 of those. Any bf16 accumulator — featurize, score,
+    or state — would miss by >10x the tolerance."""
+    d_big, f, t = 4096, 8, 16
+    w = jnp.ones((1, f, d_big), jnp.bfloat16)
+    deg = tuple([1] * f)
+    sc = tuple([1.0] * f)
+    q = jnp.full((1, 1, t, d_big), _VAL, jnp.bfloat16)
+    k = jnp.full((1, 1, t, d_big), _VAL, jnp.bfloat16)
+    v = jnp.ones((1, 1, t, 4), jnp.float32)
+    out, s, n = rm_attention_fused_prefill(q, k, v, w, deg, sc, chunk=8,
+                                           use_pallas=True, interpret=True)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(n), t * 8.0, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), t * 8.0, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-3)
+
+
+def test_fused_bf16_budget_vs_fp32():
+    """bf16 inputs/weights may only move the causal outputs by the rounding
+    of x and w — fp32 accumulation keeps the rest."""
+    fm, w, deg, sc = _setup(d=16, F=128)
+    q, k, v = _qkv(jax.random.PRNGKey(11), 1, 2, 48, 16, 8)
+    out32 = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=16,
+                                      use_pallas=True, interpret=True)
+    outb = rm_attention_fused_causal(
+        q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v,
+        w.astype(jnp.bfloat16), deg, sc, chunk=16,
+        use_pallas=True, interpret=True)
+    assert outb.dtype == jnp.float32
+    scale = max(float(np.max(np.abs(np.asarray(out32)))), 1e-6)
+    assert float(np.max(np.abs(np.asarray(outb - out32)))) <= 5e-2 * scale
+
+
+# ---------------------------------------------------------------------------
+# edge shapes + masking
+# ---------------------------------------------------------------------------
+def test_edge_batch_zero():
+    _, w, deg, sc = _setup()
+    q = jnp.zeros((0, 2, 8, 12))
+    v = jnp.zeros((0, 2, 8, 4))
+    out = rm_attention_fused_causal(q, q, v, w, deg, sc, chunk=8,
+                                    use_pallas=True, interpret=True)
+    assert out.shape == (0, 2, 8, 4)
+    out, s, n = rm_attention_fused_prefill(q, q, v, w, deg, sc, chunk=8,
+                                           use_pallas=True, interpret=True)
+    assert out.shape == (0, 2, 8, 4)
+    assert s.shape[0] == 0 and n.shape[0] == 0
+
+
+def test_edge_one_tile_features_and_chunk_gt_t():
+    """F below one feature block and chunk far above T: a single-cell grid,
+    fully exercised by the padding invariants (deg=0/scale=0 columns)."""
+    fm, w, deg, sc = _setup(d=6, F=8)
+    q, k, v = _qkv(jax.random.PRNGKey(13), 1, 1, 5, 6, 3)
+    got = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=512,
+                                    block_f=512, use_pallas=True,
+                                    interpret=True)
+    want = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=4,
+                                     use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_edge_t_one():
+    _, w, deg, sc = _setup()
+    q, k, v = _qkv(jax.random.PRNGKey(14), 2, 1, 1, 12, 4)
+    got = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=8,
+                                    use_pallas=True, interpret=True)
+    want = rm_attention_fused_causal(q, k, v, w, deg, sc, chunk=8,
+                                     use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kvalid_masks_padded_keys():
+    """Zeroed kvalid rows contribute nothing: outputs at valid positions
+    equal the run over the unpadded prefix."""
+    _, w, deg, sc = _setup()
+    b, h, t, tv = 2, 2, 20, 14
+    q, k, v = _qkv(jax.random.PRNGKey(15), b, h, t, 12, 4)
+    kvalid = (jnp.arange(t) < tv).astype(jnp.float32)[None, :].repeat(b, 0)
+    got = rm_attention_fused_causal(q, k, v, w, deg, sc, kvalid=kvalid,
+                                    chunk=8, use_pallas=True, interpret=True)
+    want = rm_attention_fused_causal(q[:, :, :tv], k[:, :, :tv],
+                                     v[:, :, :tv], w, deg, sc, chunk=8,
+                                     use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[:, :, :tv]),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_causal_grads_flow():
+    _, w, deg, sc = _setup(d=8, F=48)
+    q, k, v = _qkv(jax.random.PRNGKey(17), 1, 2, 24, 8, 4)
+
+    def loss(q_, k_, v_, w_):
+        out = rm_attention_fused_causal(q_, k_, v_, w_, deg, sc, chunk=8,
+                                        use_pallas=True, interpret=True)
+        return jnp.sum(out ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(q, k, v, w)
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in grads)
+
+
+# ---------------------------------------------------------------------------
+# model + serving integration
+# ---------------------------------------------------------------------------
+def _rm_cfg(mode):
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-1.7b", smoke=True, attention_mode="rm")
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    return dataclasses.replace(
+        cfg, rm=dataclasses.replace(cfg.rm, fuse_featurize=mode))
+
+
+def test_model_fuse_on_matches_off():
+    """cfg.rm.fuse_featurize="on" (fused formulation) == "off" (two-launch)
+    at the logits level — the flag changes the launch structure, never the
+    math."""
+    from repro.models import forward, init_model
+
+    cfg_off = _rm_cfg("off")
+    cfg_on = _rm_cfg("on")
+    params = init_model(cfg_off, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                cfg_off.vocab_size)
+    lo_off, _ = forward(params, cfg_off, {"tokens": tokens})
+    lo_on, _ = forward(params, cfg_on, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(lo_on), np.asarray(lo_off),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_model_fused_prefill_decode_consistency():
+    """Fused prefill (out + state from one formulation) then fused decode
+    must track the fused full forward — the serving invariant."""
+    from repro.models import decode_step, forward, init_model, prefill
+
+    cfg = _rm_cfg("on")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    b, t_prompt, t_extra = 2, 12, 3
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (b, t_prompt + t_extra), 0, cfg.vocab_size)
+    full_logits, _ = forward(params, cfg, {"tokens": tokens})
+    pre_logits, cache = prefill(params, cfg,
+                                {"tokens": tokens[:, :t_prompt]}, max_len=32)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits), np.asarray(full_logits[:, :t_prompt]),
+        rtol=2e-3, atol=2e-3)
+    for i in range(t_extra):
+        pos = jnp.full((b,), t_prompt + i, jnp.int32)
+        step_logits, cache = decode_step(params, cfg, cache,
+                                         tokens[:, t_prompt + i][:, None],
+                                         pos)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]),
+            np.asarray(full_logits[:, t_prompt + i]),
+            rtol=5e-3, atol=5e-3)
+
+
+def test_engine_reports_and_validates_fuse_flag():
+    from repro.models import init_model
+    from repro.serve import ServingEngine
+
+    cfg = _rm_cfg("on")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=32)
+    assert eng.fused_attention is True
+    cfg_off = _rm_cfg("off")
+    assert ServingEngine(cfg_off, params, num_slots=2,
+                         max_len=32).fused_attention is False
+    with pytest.raises(ValueError, match="fuse_featurize"):
+        ServingEngine(_rm_cfg("bogus"), params, num_slots=2, max_len=32)
