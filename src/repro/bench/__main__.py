@@ -19,6 +19,26 @@ import sys
 from pathlib import Path
 
 
+def _warn_if_interpret_cpu(path: str) -> None:
+    """ROADMAP item 1 nag: shout when an artifact's throughput columns
+    timed the Pallas INTERPRETER on CPU rather than real hardware, so an
+    interpret-mode committed trajectory can't silently pass for measured
+    kernel performance."""
+    try:
+        payload = json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return
+    prov = payload.get("provenance", {})
+    backend = prov.get("backend", payload.get("backend"))
+    interpret = payload.get("interpret", prov.get("interpret"))
+    if interpret and backend != "tpu":
+        print(f"WARNING: {path} was produced in Pallas INTERPRET mode on "
+              f"backend={backend!r} — its throughput columns time the "
+              "interpreter, not hardware. Re-run the grid on a real "
+              "GPU/TPU backend before reading them as the perf "
+              "trajectory (ROADMAP item 1).")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.bench",
@@ -70,6 +90,8 @@ def main(argv=None) -> int:
                 committed = json.loads(Path(args.against).read_text())
                 fresh = json.loads(Path(args.check).read_text())
                 errors += schema.diff_coverage(committed, fresh)
+        for path in filter(None, (args.check, args.against)):
+            _warn_if_interpret_cpu(path)
         if errors:
             print(f"BENCH COVERAGE FAILURES ({args.check}):")
             for e in errors:

@@ -23,7 +23,6 @@ in the block cache all three wrappers consult.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import jax
@@ -34,19 +33,26 @@ from repro.analysis.roofline import HW_V5E
 from repro.bench.schema import SCHEMA_VERSION, cell_key
 from repro.bench.spec import AttnShapeSpec, BenchSpec, ShapeSpec, make_kernel
 from repro.common.dtypes import resolve_precision
+from repro.obs import clock as _obs_clock
 
 __all__ = ["run_spec", "autotune_spec", "time_call", "analytic_cost",
            "attention_hbm_bytes"]
 
 
 def time_call(fn: Callable, x, repeats: int = 5) -> float:
-    """Median wall-time (us) of a jitted call, excluding compile."""
+    """Median wall-time (us) of a jitted call, excluding compile.
+
+    Reads the shared obs monotonic clock (``repro.obs.clock``) — the same
+    instrument behind the autotuner's ladder timings and the serving
+    engine's TTFT/per-token histograms, so bench and runtime numbers are
+    measured identically.
+    """
     fn(x).block_until_ready()
     times = []
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = _obs_clock.monotonic()
         fn(x).block_until_ready()
-        times.append(time.perf_counter() - t0)
+        times.append(_obs_clock.monotonic() - t0)
     return sorted(times)[len(times) // 2] * 1e6
 
 
@@ -328,9 +334,12 @@ def run_spec(
                 say(f"bench/attn/{ashape.label}/{ck},"
                     f"{cell['fused_us']:.1f},{cell['two_launch_us']:.1f},"
                     f"{cell['speedup']:.3f}")
+    from repro.common.env import platform_provenance
+
     return {
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
+        "provenance": platform_provenance(),
         "interpret": bool(spec.interpret),
         "quick": bool(spec.quick),
         "precisions": list(spec.precisions),

@@ -20,7 +20,31 @@ __all__ = [
     "jax_enable_x64",
     "set_debug_nan",
     "add_xla_flags",
+    "platform_provenance",
 ]
+
+
+def platform_provenance() -> dict:
+    """Where-did-this-number-come-from stamp for every emitted artifact.
+
+    One dict — backend name, physical device kind/count, whether Pallas
+    launches run the interpreter on this backend, and the jax version —
+    attached to bench payloads (``repro.bench``), metrics snapshots and
+    trace headers (``repro.obs``). The point is ROADMAP item 1's nag made
+    structural: an artifact claiming kernel performance must SAY it was
+    measured on interpret-mode CPU. Calling this initializes the jax
+    backend, so CLIs stamp AFTER ``set_platform``/``set_host_device_count``.
+    """
+    from repro.kernels.common import default_interpret
+
+    devices = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else "none",
+        "device_count": len(devices),
+        "interpret": bool(default_interpret()),
+        "jax_version": jax.__version__,
+    }
 
 
 def add_xla_flags(flags: str) -> None:

@@ -29,12 +29,13 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from pathlib import Path
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import clock as _obs_clock
 
 VMEM_BUDGET = 12 * 1024 * 1024  # bytes
 
@@ -416,14 +417,16 @@ def feasible_feature_blocks(
 
 def _median_seconds(fn: Callable[[], object], repeats: int) -> float:
     # warm up / compile outside the timed region — and BLOCK on it, so the
-    # async warm-up tail can't bleed into the first timed repeat
+    # async warm-up tail can't bleed into the first timed repeat. Timing
+    # reads the shared obs monotonic clock (repro.obs.clock), the same
+    # instrument behind bench timings and serving latencies.
     jax.block_until_ready(fn())
     times = []
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = _obs_clock.monotonic()
         out = fn()
         jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
+        times.append(_obs_clock.monotonic() - t0)
     return sorted(times)[len(times) // 2]
 
 

@@ -18,6 +18,7 @@ from repro.ctr.ref import ctr_feature_fused_ref
 from repro.kernels.common import default_interpret as _default_interpret
 from repro.kernels.common import get_feature_blocks as _get_blocks
 from repro.kernels.common import round_up as _round_up
+from repro.obs.trace import kernel_scope as _kernel_scope
 from repro.kernels.ctr_feature.ctr_feature import ctr_feature_fused_pallas
 
 
@@ -60,19 +61,23 @@ def ctr_feature_fused(
     # accumulator pair + both output halves)
     bm, bf = blocks or _get_blocks("ctr_feature", d, k, b, fc, dtype=x.dtype,
                                    weight_tensors=2, accumulators=4)
-    b_pad = _round_up(max(b, bm), bm)
-    f_pad = _round_up(max(fc, bf), bf)
-    xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
-    pf = f_pad - fc
-    wrp = jnp.pad(wr, ((0, 0), (0, pf), (0, 0)))
-    wip = jnp.pad(wi, ((0, 0), (0, pf), (0, 0)))
-    # padded columns: depth 0 keeps the accumulator at (1, 0); zero scales
-    # make both halves exactly 0 before the slice.
-    deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, pf),))
-    scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, pf),))
-    re, im = ctr_feature_fused_pallas(
-        xp, wrp, wip, deg_p, scale_p,
-        block_b=bm, block_f=bf, interpret=interpret,
-    )
-    out = jnp.concatenate([re[:b, :fc], im[:b, :fc]], axis=-1)
+    with _kernel_scope("ctr_feature", x=x,
+                       cost=dict(batch=b, d=d, depth=k, f=fc,
+                                 itemsize=jnp.dtype(x.dtype).itemsize),
+                       blocks=[bm, bf], interpret=bool(interpret)):
+        b_pad = _round_up(max(b, bm), bm)
+        f_pad = _round_up(max(fc, bf), bf)
+        xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
+        pf = f_pad - fc
+        wrp = jnp.pad(wr, ((0, 0), (0, pf), (0, 0)))
+        wip = jnp.pad(wi, ((0, 0), (0, pf), (0, 0)))
+        # padded columns: depth 0 keeps the accumulator at (1, 0); zero
+        # scales make both halves exactly 0 before the slice.
+        deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, pf),))
+        scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, pf),))
+        re, im = ctr_feature_fused_pallas(
+            xp, wrp, wip, deg_p, scale_p,
+            block_b=bm, block_f=bf, interpret=interpret,
+        )
+        out = jnp.concatenate([re[:b, :fc], im[:b, :fc]], axis=-1)
     return out.reshape(*batch_shape, 2 * fc)

@@ -28,6 +28,7 @@ from repro.kernels.rm_attention.ref import (
     rm_attention_ref,
 )
 from repro.kernels.rm_attention.rm_attention import rm_attention_chunked_pallas
+from repro.obs.trace import kernel_scope as _kernel_scope
 
 
 def _round_up(x: int, m: int) -> int:
@@ -84,16 +85,18 @@ def _causal_pallas(zq, zk, v, chunk: int, eps: float, interpret: bool):
     zq_p, zk_p, v_p = _pad_t(zq, pad), _pad_t(zk, pad), _pad_t(v, pad)
     n = (t + pad) // chunk
     _, _, s_prev, n_prev = _chunk_states(zk_p, v_p, chunk)
-    out = rm_attention_chunked_pallas(
-        zq_p.reshape(b * h, t + pad, f),
-        zk_p.reshape(b * h, t + pad, f),
-        v_p.reshape(b * h, t + pad, dv),
-        s_prev.reshape(b * h, n, f, dv),
-        n_prev.reshape(b * h, n, f, 1),
-        chunk=chunk,
-        eps=eps,
-        interpret=interpret,
-    )
+    with _kernel_scope("rm_attention", x=zq, chunk=chunk,
+                       interpret=bool(interpret)):
+        out = rm_attention_chunked_pallas(
+            zq_p.reshape(b * h, t + pad, f),
+            zk_p.reshape(b * h, t + pad, f),
+            v_p.reshape(b * h, t + pad, dv),
+            s_prev.reshape(b * h, n, f, dv),
+            n_prev.reshape(b * h, n, f, 1),
+            chunk=chunk,
+            eps=eps,
+            interpret=interpret,
+        )
     return out.reshape(b, h, t + pad, dv)[:, :, :t]
 
 
@@ -265,9 +268,14 @@ def _fused_causal_launch(q, k, v, kvalid, w, deg_t, scale_t, chunk, block_f,
     f = w.shape[1]
     (qf, kf, vf, kval3, w_p, deg, scale, chunk, bf, tp,
      f_pad) = _fused_pad(q, k, v, kvalid, w, deg_t, scale_t, chunk, block_f)
-    out, s, n = rm_fused_attention_pallas(
-        qf, kf, vf, kval3, w_p, deg, scale,
-        chunk=chunk, block_f=bf, eps=eps, interpret=interpret)
+    with _kernel_scope("rm_attn_fused", x=q,
+                       cost=dict(batch=b * h, t=t, d=d, depth=w.shape[0],
+                                 f=f, dv=dv,
+                                 itemsize=jnp.dtype(q.dtype).itemsize),
+                       blocks=[chunk, bf], interpret=bool(interpret)):
+        out, s, n = rm_fused_attention_pallas(
+            qf, kf, vf, kval3, w_p, deg, scale,
+            chunk=chunk, block_f=bf, eps=eps, interpret=interpret)
     return (out.reshape(b, h, tp, dv)[:, :, :t],
             s.reshape(b, h, f_pad, dv)[:, :, :f],
             n.reshape(b, h, f_pad)[:, :, :f])
@@ -310,11 +318,16 @@ def _fused_noncausal(q, k, v, kvalid, w, deg_t, scale_t, chunk, block_f,
     dv = v.shape[-1]
     (qf, kf, vf, kval3, w_p, deg, scale, chunk, bf, tp,
      f_pad) = _fused_pad(q, k, v, kvalid, w, deg_t, scale_t, chunk, block_f)
-    s, n = rm_fused_state_pallas(kf, vf, kval3, w_p, deg, scale,
-                                 chunk=chunk, block_f=bf,
-                                 interpret=interpret)
-    out = rm_fused_apply_pallas(qf, s, n, w_p, deg, scale, chunk=chunk,
-                                block_f=bf, eps=eps, interpret=interpret)
+    with _kernel_scope("rm_attn_fused", x=q, mode="noncausal",
+                       cost=dict(batch=b * h, t=t, d=d, depth=w.shape[0],
+                                 f=w.shape[1], dv=dv,
+                                 itemsize=jnp.dtype(q.dtype).itemsize),
+                       blocks=[chunk, bf], interpret=bool(interpret)):
+        s, n = rm_fused_state_pallas(kf, vf, kval3, w_p, deg, scale,
+                                     chunk=chunk, block_f=bf,
+                                     interpret=interpret)
+        out = rm_fused_apply_pallas(qf, s, n, w_p, deg, scale, chunk=chunk,
+                                    block_f=bf, eps=eps, interpret=interpret)
     return out.reshape(b, h, tp, dv)[:, :, :t]
 
 

@@ -26,6 +26,7 @@ from repro.kernels.rm_feature.rm_feature import (
 from repro.kernels.common import default_interpret as _default_interpret
 from repro.kernels.common import get_feature_blocks as _get_blocks
 from repro.kernels.common import round_up as _round_up
+from repro.obs.trace import kernel_scope as _kernel_scope
 
 
 # ---------------------------------------------------------------------------
@@ -73,15 +74,20 @@ def rm_feature_fused(
 
     b = xf.shape[0]
     bm, bf = blocks or _get_blocks("rm_feature", d, k, b, f, dtype=x.dtype)
-    b_pad = _round_up(max(b, bm), bm)
-    f_pad = _round_up(max(f, bf), bf)
-    xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
-    wp = jnp.pad(w, ((0, 0), (0, f_pad - f), (0, 0)))
-    deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, f_pad - f),))
-    scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, f_pad - f),))
-    out = rm_feature_fused_pallas(
-        xp, wp, deg_p, scale_p, block_b=bm, block_f=bf, interpret=interpret,
-    )
+    with _kernel_scope("rm_feature", x=x,
+                       cost=dict(batch=b, d=d, depth=k, f=f,
+                                 itemsize=jnp.dtype(x.dtype).itemsize),
+                       blocks=[bm, bf], interpret=bool(interpret)):
+        b_pad = _round_up(max(b, bm), bm)
+        f_pad = _round_up(max(f, bf), bf)
+        xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
+        wp = jnp.pad(w, ((0, 0), (0, f_pad - f), (0, 0)))
+        deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, f_pad - f),))
+        scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, f_pad - f),))
+        out = rm_feature_fused_pallas(
+            xp, wp, deg_p, scale_p, block_b=bm, block_f=bf,
+            interpret=interpret,
+        )
     return out[:b, :f].reshape(*batch_shape, f)
 
 

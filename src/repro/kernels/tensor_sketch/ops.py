@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels.common import default_interpret as _default_interpret
 from repro.kernels.common import get_batch_block as _get_batch_block
 from repro.kernels.common import round_up as _round_up
+from repro.obs.trace import kernel_scope as _kernel_scope
 from repro.sketch.ref import tensor_sketch_fused_ref
 from repro.kernels.tensor_sketch.tensor_sketch import tensor_sketch_fused_pallas
 
@@ -67,19 +68,24 @@ def tensor_sketch_fused(
         bm = int(blocks[0])
     else:
         bm = _get_batch_block("tensor_sketch", d, k, f_pad, b, dtype=x.dtype)
-    b_pad = _round_up(max(b, bm), bm)
-    xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
-    pf = f_pad - fs
-    wrp = jnp.pad(wr, ((0, 0), (0, pf), (0, 0)))
-    wip = jnp.pad(wi, ((0, 0), (0, pf), (0, 0)))
-    # padded columns: depth 0 keeps the accumulator at (1, 0); zero inverse-DFT
-    # rows and zero scales make their outputs exactly 0 before the slice.
-    deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, pf),))
-    mrp = jnp.pad(mr, ((0, pf), (0, pf)))
-    mip = jnp.pad(mi, ((0, pf), (0, pf)))
-    scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, pf),))
-    out = tensor_sketch_fused_pallas(
-        xp, wrp, wip, deg_p, mrp, mip, scale_p,
-        block_b=bm, interpret=interpret,
-    )
+    with _kernel_scope("tensor_sketch", x=x,
+                       cost=dict(batch=b, d=d, depth=k, f=fs,
+                                 itemsize=jnp.dtype(x.dtype).itemsize),
+                       blocks=[bm, f_pad], interpret=bool(interpret)):
+        b_pad = _round_up(max(b, bm), bm)
+        xp = jnp.pad(xf, ((0, b_pad - b), (0, 0)))
+        pf = f_pad - fs
+        wrp = jnp.pad(wr, ((0, 0), (0, pf), (0, 0)))
+        wip = jnp.pad(wi, ((0, 0), (0, pf), (0, 0)))
+        # padded columns: depth 0 keeps the accumulator at (1, 0); zero
+        # inverse-DFT rows and zero scales make their outputs exactly 0
+        # before the slice.
+        deg_p = jnp.pad(col_deg.astype(jnp.int32), ((0, pf),))
+        mrp = jnp.pad(mr, ((0, pf), (0, pf)))
+        mip = jnp.pad(mi, ((0, pf), (0, pf)))
+        scale_p = jnp.pad(col_scale.astype(jnp.float32), ((0, pf),))
+        out = tensor_sketch_fused_pallas(
+            xp, wrp, wip, deg_p, mrp, mip, scale_p,
+            block_b=bm, interpret=interpret,
+        )
     return out[:b, :fs].reshape(*batch_shape, fs)

@@ -8,6 +8,12 @@
 ``--data-parallel`` builds a host mesh and runs data-parallel decode with
 replicated estimator params (DESIGN.md §10) — pair with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU.
+
+Observability (docs/observability.md): ``--trace-out trace.jsonl`` streams
+the request lifecycle + ``kernel/*`` spans as JSONL (summarize or convert
+with ``python -m repro.obs``), ``--metrics-out metrics.json`` snapshots the
+TTFT / token-latency / tokens-per-sec histograms, and ``--drift-every N``
+runs the online (eps, delta) Gram-drift check every N decode iterations.
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ def make_engine(
     max_len: int = 128,
     mesh=None,
     seed: int = 0,
+    obs=None,
 ) -> ServingEngine:
     """Config -> params -> engine, with every override forwarded.
 
@@ -47,7 +54,7 @@ def make_engine(
         raise ValueError(f"{arch} is encoder-only; nothing to serve")
     params = init_model(cfg, jax.random.PRNGKey(seed))
     return ServingEngine(cfg, params, num_slots=num_slots, max_len=max_len,
-                         mesh=mesh)
+                         mesh=mesh, obs=obs)
 
 
 def main(argv=None):
@@ -73,6 +80,16 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="stream a JSONL lifecycle + kernel-span trace "
+                         "(inspect with python -m repro.obs)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the metrics snapshot (TTFT/latency/tok-s "
+                         "histograms) as JSON")
+    ap.add_argument("--drift-every", type=int, default=0, metavar="N",
+                    help="run the online (eps, delta) Gram-drift check "
+                         "every N decode iterations (0 = off; needs an "
+                         "rm-family --attention-mode)")
     args = ap.parse_args(argv)
 
     # platform knobs must land before the first device query initializes
@@ -91,10 +108,38 @@ def main(argv=None):
         mesh = make_host_mesh()
         print(f"[serve] mesh {dict(mesh.shape)} over {len(jax.devices())} "
               "devices")
+
+    obs = None
+    if args.trace_out or args.metrics_out or args.drift_every:
+        from repro import obs as obs_mod
+
+        drift = None
+        if args.drift_every:
+            # watch a map drawn exactly like the deployed attention
+            # featurizer: same estimator family, measure and budget D
+            cfg_probe = get_config(
+                args.arch, smoke=args.smoke,
+                attention_mode=args.attention_mode,
+                estimator=args.estimator)
+            if cfg_probe.attention_mode == "rm":
+                from repro.core import ExponentialDotProductKernel
+
+                rm = cfg_probe.rm
+                drift = obs_mod.DriftMonitor.for_estimator(
+                    ExponentialDotProductKernel(sigma2=rm.sigma2),
+                    cfg_probe.resolved_head_dim, rm.num_features,
+                    estimator=rm.estimator, measure=rm.measure)
+            else:
+                print("[serve] --drift-every ignored: attention mode is "
+                      "not rm-family")
+        obs = obs_mod.Obs(trace_path=args.trace_out, drift=drift,
+                          drift_every=args.drift_every,
+                          install_kernel_tracing=True)
+
     engine = make_engine(
         args.arch, smoke=args.smoke, attention_mode=args.attention_mode,
         estimator=args.estimator, num_slots=args.slots, max_len=args.max_len,
-        mesh=mesh,
+        mesh=mesh, obs=obs,
     )
     cfg = engine.cfg
     rng = np.random.default_rng(0)
@@ -113,6 +158,32 @@ def main(argv=None):
         ttft = (s.t_first_token - s.t_enqueue) if s.t_first_token else None
         print(f"  req {rid}: {len(s.generated)} tokens, "
               f"ttft={ttft:.2f}s" if ttft else f"  req {rid}")
+
+    if obs is not None:
+        snap = obs.metrics.snapshot()
+        hists = snap.get("histograms", {})
+
+        def _h(name):
+            return hists.get(name, {})
+
+        ttft_s, tok_s = _h("serve/ttft_s"), _h("serve/tokens_per_s")
+        if ttft_s:
+            print(f"[serve] ttft p50={ttft_s['p50']:.3f}s "
+                  f"p99={ttft_s['p99']:.3f}s | per-request tok/s "
+                  f"p50={tok_s.get('p50', float('nan')):.1f}")
+        if obs.drift is not None and obs.drift.last is not None:
+            rep = obs.drift.last
+            print(f"[serve] drift: sup_err={rep.sup_err:.4f} vs "
+                  f"eps({rep.num_features}, delta)={rep.eps_bound:.4f} "
+                  f"[{'OK' if rep.ok else 'VIOLATION'}] "
+                  f"({obs.drift.checks} checks, "
+                  f"{obs.drift.violations} violations)")
+        if args.metrics_out:
+            obs.write_metrics(args.metrics_out)
+            print(f"[serve] wrote metrics -> {args.metrics_out}")
+        obs.close()
+        if args.trace_out:
+            print(f"[serve] wrote trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

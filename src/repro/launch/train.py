@@ -37,6 +37,15 @@ def main():
                     choices=["none", "host", "single", "multi"])
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="TP size for --mesh host")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="stream a JSONL train/step + kernel-span trace "
+                         "(inspect with python -m repro.obs)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the metrics snapshot (step-time histogram, "
+                         "loss gauge) as JSON")
+    ap.add_argument("--drift-every", type=int, default=0, metavar="N",
+                    help="run the online (eps, delta) Gram-drift check "
+                         "every N train steps (0 = off; rm attention only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -56,8 +65,43 @@ def main():
     mesh = mesh() if callable(mesh) else mesh
     hyper = TrainHyper(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
                        total_steps=args.steps, grad_accum=args.grad_accum)
-    trainer = Trainer(cfg, hyper, data, ckpt_dir=args.ckpt_dir, mesh=mesh)
+
+    obs = None
+    if args.trace_out or args.metrics_out or args.drift_every:
+        from repro import obs as obs_mod
+
+        drift = None
+        if args.drift_every and cfg.attention_mode == "rm":
+            from repro.core import ExponentialDotProductKernel
+
+            rm = cfg.rm
+            drift = obs_mod.DriftMonitor.for_estimator(
+                ExponentialDotProductKernel(sigma2=rm.sigma2),
+                cfg.resolved_head_dim, rm.num_features,
+                estimator=rm.estimator, measure=rm.measure)
+        elif args.drift_every:
+            print("[train] --drift-every ignored: attention mode is not "
+                  "rm-family")
+        obs = obs_mod.Obs(trace_path=args.trace_out, drift=drift,
+                          drift_every=args.drift_every,
+                          install_kernel_tracing=True)
+
+    trainer = Trainer(cfg, hyper, data, ckpt_dir=args.ckpt_dir, mesh=mesh,
+                      obs=obs)
     trainer.train(args.steps)
+
+    if obs is not None:
+        if obs.drift is not None and obs.drift.last is not None:
+            rep = obs.drift.last
+            print(f"[train] drift: sup_err={rep.sup_err:.4f} vs "
+                  f"eps({rep.num_features}, delta)={rep.eps_bound:.4f} "
+                  f"[{'OK' if rep.ok else 'VIOLATION'}]")
+        if args.metrics_out:
+            obs.write_metrics(args.metrics_out)
+            print(f"[train] wrote metrics -> {args.metrics_out}")
+        obs.close()
+        if args.trace_out:
+            print(f"[train] wrote trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

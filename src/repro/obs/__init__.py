@@ -1,0 +1,41 @@
+"""``repro.obs`` — tracing, metrics and online (eps, delta) accuracy
+monitoring (DESIGN.md §14, docs/observability.md).
+
+Public surface:
+
+* :class:`Obs` / :data:`NOOP` / :func:`resolve` — the facade every
+  instrumented layer threads (``ServingEngine(obs=...)``,
+  ``Trainer(obs=...)``); ``None`` resolves to a zero-overhead no-op.
+* :mod:`repro.obs.clock` — the ONE monotonic clock behind bench timings,
+  span durations and serving latencies (tests inject ``FakeClock``).
+* :class:`MetricsRegistry` (counters/gauges/histograms, p50/p90/p99
+  summaries, provenance-stamped JSON snapshots).
+* :class:`Tracer` + :func:`chrome_trace` (JSONL spans/events, Perfetto
+  export) and :func:`kernel_scope` (named_scope/TraceAnnotation + analytic
+  launch costs inside the four fused Pallas wrapper ops).
+* :class:`DriftMonitor` — the paper's concentration bound as a live SLO.
+
+CLI: ``python -m repro.obs {summarize,diff,chrome} trace.jsonl``.
+"""
+from repro.obs import clock
+from repro.obs.core import NOOP, NoopObs, Obs, resolve
+from repro.obs.drift import DriftMonitor, DriftReport, hoeffding_eps
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (
+    TRACE_SCHEMA,
+    Tracer,
+    chrome_trace,
+    current_tracer,
+    install_tracer,
+    kernel_scope,
+    read_trace,
+    write_chrome,
+)
+
+__all__ = [
+    "Obs", "NoopObs", "NOOP", "resolve", "clock",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Tracer", "TRACE_SCHEMA", "chrome_trace", "read_trace", "write_chrome",
+    "install_tracer", "current_tracer", "kernel_scope",
+    "DriftMonitor", "DriftReport", "hoeffding_eps",
+]

@@ -1,0 +1,181 @@
+"""Online Gram-drift monitoring: the paper's (eps, delta) guarantee as a
+live SLO.
+
+The entire value proposition of a random feature map is probabilistic —
+Kar & Karnick's Hoeffding-style concentration (PAPER.md Thm 6 / Theorem 12,
+inverted in ``repro.core.bounds``) promises ``sup |<Z(x), Z(y)> - K(x, y)|
+<= eps`` with probability ``1 - delta`` at the deployed feature budget D.
+Nothing about a serving or training run re-checks that promise: a buggy
+param splice, a bad precision cast, or an under-budget D would silently
+degrade every downstream Gram estimate / attention score.
+
+:class:`DriftMonitor` makes the bound observable. It holds a small
+reservoir of sentinel points in the kernel's domain ball, and on every
+``check()`` recomputes the empirical ``sup |<Z(x), Z(y)> - K(x, y)|`` over
+all sentinel pairs (oracle jnp path — a few microseconds at reservoir
+scale) and compares it against the per-pair Hoeffding + union bound at the
+map's actual D::
+
+    eps(D, delta) = sqrt(8 C^2 log(2 n_pairs / delta) / D) + bias
+
+where ``C`` is the measure-matched estimator bound from
+``repro.core.bounds.constants_for`` (the beyond-paper ``f(R^2)`` for the
+proportional measure these maps default to) and ``bias`` is the plan's
+deterministic truncation bias. The same formula gates the offline (eps,
+delta) acceptance suite (tests/test_statistical_bounds.py) — the monitor
+is that suite running continuously inside serving/training, wired to
+metrics/trace via ``Obs`` (``drift/sup_err`` gauge, ``drift/violations``
+counter, a ``drift/violation`` trace event when it fires).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = ["DriftReport", "DriftMonitor", "hoeffding_eps"]
+
+
+def hoeffding_eps(kernel, radius: float, dim: int, num_features: int,
+                  n_pairs: int, delta: float,
+                  measure: str = "proportional") -> float:
+    """Per-pair Hoeffding + union-over-pairs error bound at budget D.
+
+    The inversion of ``core.bounds.pointwise_failure_prob`` for a FIXED
+    sentinel set (n_pairs pairs) rather than the paper's epsilon-net over
+    the whole domain — the right bound for a monitor that watches specific
+    points.
+    """
+    from repro.core.bounds import constants_for
+
+    consts = constants_for(kernel, radius, dim)
+    c = consts.c_omega if measure == "geometric" else consts.c_proportional
+    return math.sqrt(
+        8.0 * c * c * math.log(2.0 * n_pairs / delta) / num_features)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    """One ``check()`` result: the observed sup error vs the live bound."""
+
+    sup_err: float
+    eps_bound: float
+    num_features: int
+    n_pairs: int
+    ok: bool
+
+
+class DriftMonitor:
+    """Watch a deployed feature map's Gram error against its (eps, delta)
+    bound.
+
+    Args:
+        feature_map: any registry feature-map object (``estimate_gram`` +
+            ``plan`` + ``output_dim`` — every family conforms).
+        kernel: the exact ``DotProductKernel`` the map approximates.
+        delta: failure probability the bound is evaluated at.
+        n_sentinels: reservoir size (n_pairs grows quadratically; 16
+            sentinel points = 136 monitored pairs).
+        radius: domain ball radius the sentinels are drawn in (must match
+            the deployment's data scaling — the bound constants depend on
+            it).
+        seed: sentinel draw seed.
+        measure: degree measure the map was built with (selects the
+            estimator constant C, see ``core.bounds``).
+        margin: multiplier on the bound before flagging (1.0 = flag
+            exactly at eps(D, delta)).
+    """
+
+    def __init__(self, feature_map, kernel, *, delta: float = 0.05,
+                 n_sentinels: int = 16, radius: float = 0.9, seed: int = 0,
+                 measure: str = "proportional", margin: float = 1.0):
+        self.fm = feature_map
+        self.kernel = kernel
+        self.delta = float(delta)
+        self.radius = float(radius)
+        self.measure = measure
+        self.margin = float(margin)
+        self.checks = 0
+        self.violations = 0
+        self.last: Optional[DriftReport] = None
+        d = int(feature_map.plan.input_dim)
+        rng = np.random.default_rng(seed)
+        pts = rng.standard_normal((n_sentinels, d))
+        pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+        # span radii up to R (not all on the shell): drift in low-degree
+        # terms shows up at small radii, high-degree at the boundary
+        pts *= np.linspace(0.3, 1.0, n_sentinels)[:, None] * self.radius
+        self._sentinels = np.asarray(pts, np.float32)
+        self._rng = rng
+
+    @classmethod
+    def for_estimator(cls, kernel, dim: int, num_features: int, *,
+                      estimator: str = "rm", seed: int = 0,
+                      measure: str = "proportional", **kwargs):
+        """Build a fresh map of ``estimator`` at budget D and monitor it.
+
+        The serve/train CLIs use this when no live map object is handy:
+        the monitor then watches a map drawn EXACTLY like the deployed one
+        (same registry entry, measure and budget), which observes the
+        family's concentration at the deployed D rather than one specific
+        parameter draw.
+        """
+        import jax
+
+        from repro.core import make_feature_map
+
+        fm = make_feature_map(kernel, dim, num_features,
+                              jax.random.PRNGKey(seed), estimator=estimator,
+                              measure=measure)
+        return cls(fm, kernel, measure=measure, **kwargs)
+
+    @property
+    def n_pairs(self) -> int:
+        n = self._sentinels.shape[0]
+        return n * (n + 1) // 2
+
+    def ingest(self, rows) -> None:
+        """Reservoir-sample live data rows into the sentinel set.
+
+        Rows are clipped to the domain ball (the bound constants only hold
+        inside radius R). Each incoming row replaces a uniformly random
+        sentinel with probability ``n_sentinels / seen`` — standard
+        reservoir sampling, so the sentinel set tracks the live input
+        distribution without growing.
+        """
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        norms = np.linalg.norm(rows, axis=1, keepdims=True)
+        scale = np.minimum(1.0, self.radius / np.maximum(norms, 1e-12))
+        rows = rows * scale
+        n = self._sentinels.shape[0]
+        for row in rows:
+            j = self._rng.integers(0, n * 4)
+            if j < n:
+                self._sentinels[j] = row
+
+    def eps_bound(self) -> float:
+        """The live (eps, delta) envelope at the monitored map's D."""
+        stat = hoeffding_eps(
+            self.kernel, self.radius, int(self.fm.plan.input_dim),
+            int(self.fm.output_dim), self.n_pairs, self.delta,
+            measure=self.measure)
+        bias = float(self.fm.plan.truncation_bias(self.radius))
+        return stat + bias
+
+    def check(self) -> DriftReport:
+        """Recompute sup Gram error over the sentinels; compare to bound."""
+        X = self._sentinels
+        G = np.asarray(self.fm.estimate_gram(X, use_pallas=False))
+        K = np.asarray(self.kernel.gram(X))
+        sup_err = float(np.max(np.abs(G - K)))
+        bound = self.eps_bound()
+        ok = sup_err <= self.margin * bound
+        self.checks += 1
+        if not ok:
+            self.violations += 1
+        self.last = DriftReport(sup_err=sup_err, eps_bound=bound,
+                                num_features=int(self.fm.output_dim),
+                                n_pairs=self.n_pairs, ok=ok)
+        return self.last

@@ -1,0 +1,216 @@
+"""Span tracing: JSONL events, Chrome-trace export, kernel-launch scopes.
+
+A :class:`Tracer` records two record kinds on the shared monotonic clock
+(``repro.obs.clock``), streamed to a ``.jsonl`` file when a path is given
+and always kept in memory::
+
+    {"type": "meta",  "schema": ..., "provenance": {...}, "wall_time": ...}
+    {"type": "span",  "name": ..., "ts_us": ..., "dur_us": ..., "attrs": {}}
+    {"type": "event", "name": ..., "ts_us": ...,               "attrs": {}}
+
+The first line of every trace file is the ``meta`` record (schema version +
+platform provenance), which is what ``tools/check_trace.py`` validates and
+``python -m repro.obs`` summarizes/diffs. :func:`chrome_trace` converts a
+record list to the Chrome ``traceEvents`` format, so any trace opens in
+Perfetto / ``chrome://tracing`` (spans become complete "X" slices, events
+instant "i" marks).
+
+Kernel launches are traced through the AMBIENT tracer: the four fused
+Pallas wrapper ops (rm_feature, tensor_sketch, ctr_feature, rm_attention)
+run under :func:`kernel_scope`, which always applies ``jax.named_scope``
+(so device profiles / HLO dumps carry the kernel name at zero cost) and —
+only when a tracer is installed via ``install_tracer`` — additionally
+wraps the launch in ``jax.profiler.TraceAnnotation`` and records a span
+with the analytic FLOPs/HBM-bytes for that launch shape
+(``repro.bench.roofline.launch_cost``). Inside a ``jit`` trace the wrapper
+body runs once per compile, not per call; such spans carry
+``"traced": true`` and their duration is TRACE time — per-call device
+timing belongs to the jax profiler, the span marks which kernels a
+compilation touched and what they cost analytically.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from repro.obs import clock as _clock
+
+__all__ = ["TRACE_SCHEMA", "Tracer", "install_tracer", "current_tracer",
+           "kernel_scope", "chrome_trace", "read_trace", "write_chrome"]
+
+TRACE_SCHEMA = "repro.obs.trace/v1"
+
+
+class Tracer:
+    """Append-only span/event recorder on the shared monotonic clock.
+
+    Args:
+        path: optional ``.jsonl`` destination — records stream to it as
+            they are recorded (the meta header first), so a crashed run
+            still leaves a readable trace.
+        now: clock override (tests inject ``FakeClock``).
+        provenance: platform stamp override for the meta record.
+    """
+
+    def __init__(self, path=None,
+                 now: Callable[[], float] = _clock.monotonic,
+                 provenance: Optional[Dict] = None):
+        self._now = now
+        self.records: List[Dict] = []
+        self._fh = None
+        if path is not None:
+            p = Path(path)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = p.open("w")
+        if provenance is None:
+            from repro.common.env import platform_provenance
+
+            provenance = platform_provenance()
+        self._emit({"type": "meta", "schema": TRACE_SCHEMA,
+                    "wall_time": _clock.wall(), "provenance": provenance})
+
+    # -- recording ----------------------------------------------------------
+    def _emit(self, rec: Dict) -> None:
+        self.records.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    def now_us(self) -> float:
+        return self._now() * 1e6
+
+    def event(self, name: str, **attrs: Any) -> None:
+        """Record an instantaneous event."""
+        self._emit({"type": "event", "name": name, "ts_us": self.now_us(),
+                    "attrs": attrs})
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs: Any):
+        """Record a duration span around the ``with`` body."""
+        t0 = self.now_us()
+        try:
+            yield self
+        finally:
+            t1 = self.now_us()
+            self._emit({"type": "span", "name": name, "ts_us": t0,
+                        "dur_us": t1 - t0, "attrs": attrs})
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- convenience --------------------------------------------------------
+    def spans(self, name: Optional[str] = None) -> List[Dict]:
+        out = [r for r in self.records if r["type"] == "span"]
+        return out if name is None else [r for r in out if r["name"] == name]
+
+    def events(self, name: Optional[str] = None) -> List[Dict]:
+        out = [r for r in self.records if r["type"] == "event"]
+        return out if name is None else [r for r in out if r["name"] == name]
+
+
+# ---------------------------------------------------------------------------
+# ambient tracer for the kernel wrappers
+# ---------------------------------------------------------------------------
+_CURRENT: Optional[Tracer] = None
+
+
+def install_tracer(tracer: Optional[Tracer]) -> Optional[Tracer]:
+    """Set (or clear, with None) the process-ambient tracer.
+
+    The kernel wrappers consult this instead of taking an ``obs`` argument
+    — their call signatures stay pure jax, and the disabled path is one
+    global ``is None`` check. Returns the previous tracer so callers can
+    restore it (``Obs.activate`` does).
+    """
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = tracer
+    return prev
+
+
+def current_tracer() -> Optional[Tracer]:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def kernel_scope(kernel: str, x=None, cost: Optional[Dict] = None,
+                 **attrs: Any):
+    """Name a fused-kernel launch for device profiles and the obs trace.
+
+    Always enters ``jax.named_scope(kernel)`` — the HLO ops produced inside
+    carry the kernel name, so TPU/XLA profiles group by kernel family with
+    no tracer installed and no measurable overhead. With an ambient tracer,
+    also enters ``jax.profiler.TraceAnnotation`` (host profiler timeline)
+    and records a ``kernel/<name>`` span: ``x`` (any operand) marks the
+    span ``traced=True`` when the launch is being traced under jit rather
+    than executed eagerly, and ``cost`` (shape kwargs for
+    ``repro.bench.roofline.launch_cost``) attaches the analytic
+    FLOPs/HBM-bytes — computed ONLY when a tracer is installed, so the
+    disabled path never pays it.
+    """
+    import jax
+
+    tracer = _CURRENT
+    if tracer is None:
+        with jax.named_scope(kernel):
+            yield
+        return
+    traced = isinstance(x, jax.core.Tracer) if x is not None else False
+    if cost is not None:
+        from repro.bench.roofline import launch_cost
+
+        attrs.update(launch_cost(kernel, **cost))
+    with jax.named_scope(kernel), \
+            jax.profiler.TraceAnnotation(f"repro.{kernel}"), \
+            tracer.span(f"kernel/{kernel}", traced=traced, **attrs):
+        yield
+
+
+# ---------------------------------------------------------------------------
+# file IO + Chrome-trace conversion
+# ---------------------------------------------------------------------------
+def read_trace(path) -> List[Dict]:
+    """Load a ``.jsonl`` trace file into a record list."""
+    records = []
+    for line in Path(path).read_text().splitlines():
+        line = line.strip()
+        if line:
+            records.append(json.loads(line))
+    return records
+
+
+def chrome_trace(records: Iterable[Dict]) -> Dict:
+    """Convert obs records to the Chrome ``traceEvents`` JSON format.
+
+    Spans become complete ("ph": "X") slices and events instant ("ph": "i")
+    marks, all on one pid/tid; ``attrs`` ride along as ``args`` so Perfetto
+    shows the analytic FLOPs/HBM-bytes on kernel slices. The meta record
+    maps to process metadata.
+    """
+    out: List[Dict] = []
+    for rec in records:
+        if rec.get("type") == "meta":
+            out.append({"name": "process_name", "ph": "M", "pid": 0,
+                        "args": {"name": "repro.obs "
+                                 + str(rec.get("provenance", {}))}})
+        elif rec.get("type") == "span":
+            out.append({"name": rec["name"], "ph": "X", "pid": 0, "tid": 0,
+                        "ts": rec["ts_us"], "dur": rec.get("dur_us", 0.0),
+                        "args": rec.get("attrs", {})})
+        elif rec.get("type") == "event":
+            out.append({"name": rec["name"], "ph": "i", "pid": 0, "tid": 0,
+                        "ts": rec["ts_us"], "s": "g",
+                        "args": rec.get("attrs", {})})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome(records: Iterable[Dict], path) -> Path:
+    """Write the Chrome-trace conversion of ``records`` to ``path``."""
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(chrome_trace(records)) + "\n")
+    return p

@@ -19,7 +19,6 @@ state updates are pure jax ops on pytrees that can carry shardings.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -33,6 +32,7 @@ from repro.models.transformer import (
     init_decode_cache,
     prefill,
 )
+from repro.obs import resolve as _obs_resolve
 from repro.serve.sampler import sample_token
 
 
@@ -61,7 +61,10 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
     for b in buckets:
         if n <= b:
             return b
-    return ((n + 2047) // 2048) * 2048
+    raise ValueError(
+        f"prompt length {n} exceeds the largest prefill bucket "
+        f"({buckets[-1]} tokens); shorten the prompt or extend the "
+        "bucket ladder in serve.engine._bucket")
 
 
 class ServingEngine:
@@ -73,7 +76,13 @@ class ServingEngine:
         max_len: int = 1024,
         rng_seed: int = 0,
         mesh: Any = None,
+        obs: Any = None,
     ):
+        # Observability is strictly opt-in: obs=None resolves to the shared
+        # no-op sink (one attribute read + pass-through per hook), so the
+        # decode loop stays bit-identical with instrumentation disabled
+        # (tests/test_serve_obs.py pins this).
+        self.obs = _obs_resolve(obs)
         if not cfg.causal:
             raise ValueError("encoder-only models cannot be served "
                              "autoregressively")
@@ -131,6 +140,7 @@ class ServingEngine:
         self.slots: List[Optional[RequestState]] = [None] * num_slots
         self.queue: List[Request] = []
         self.finished: Dict[int, RequestState] = {}
+        self._t_submit: Dict[int, float] = {}
         self._key = jax.random.PRNGKey(rng_seed)
         self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
         self._positions = jnp.zeros((num_slots,), jnp.int32)
@@ -150,7 +160,17 @@ class ServingEngine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, request: Request) -> None:
+        if len(request.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(request.prompt)} exceeds engine "
+                f"max_len {self.max_len}: the decode cache has no room "
+                "for generated tokens; raise max_len or truncate")
+        self._t_submit[request.request_id] = self.obs.now()
         self.queue.append(request)
+        self.obs.event("request/submit", request_id=request.request_id,
+                       prompt_len=len(request.prompt))
+        self.obs.counter("serve/requests_submitted")
+        self.obs.gauge("serve/queue_depth", len(self.queue))
 
     def run(self, max_iters: int = 10_000) -> Dict[int, RequestState]:
         it = 0
@@ -187,25 +207,36 @@ class ServingEngine:
             # position -1 so no real query attends to them and no state
             # accumulates them.
             tb = min(_bucket(t), self.max_len) if self._bucketed else t
-            tb = max(tb, t)  # oversize prompts (t > max_len) stay exact
-            tokens = np.zeros((1, tb), np.int32)
-            tokens[0, :t] = np.asarray(req.prompt, np.int32)
-            positions = np.full((1, tb), -1, np.int32)
-            positions[0, :t] = np.arange(t, dtype=np.int32)
-            logits, cache1 = self._prefill_fn(tb)(
-                self.params, jnp.asarray(tokens), jnp.asarray(positions)
-            )
-            self._splice_cache(slot, cache1)
+            self.obs.event("request/admit", request_id=req.request_id,
+                           slot=slot, bucket=tb)
+            with self.obs.span("prefill", request_id=req.request_id,
+                               bucket=tb, prompt_len=t):
+                tokens = np.zeros((1, tb), np.int32)
+                tokens[0, :t] = np.asarray(req.prompt, np.int32)
+                positions = np.full((1, tb), -1, np.int32)
+                positions[0, :t] = np.arange(t, dtype=np.int32)
+                logits, cache1 = self._prefill_fn(tb)(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions)
+                )
+                self._splice_cache(slot, cache1)
+            t_enqueue = self._t_submit.pop(req.request_id, None)
+            if t_enqueue is None:
+                t_enqueue = self.obs.now()
             state = RequestState(request=req, slot=slot, position=t,
-                                 t_enqueue=time.time())
+                                 t_enqueue=t_enqueue)
             # first generated token from the LAST REAL prefill logit
             self._key, sub = jax.random.split(self._key)
             tok = sample_token(logits[:, t - 1], sub, req.temperature)
             state.generated.append(int(tok[0]))
-            state.t_first_token = time.time()
+            state.t_first_token = self.obs.now()
+            self.obs.histogram("serve/ttft_s",
+                               state.t_first_token - state.t_enqueue)
             self._tokens = self._tokens.at[slot, 0].set(tok[0])
             self._positions = self._positions.at[slot].set(t)
             self.slots[slot] = state
+            self.obs.gauge("serve/queue_depth", len(self.queue))
+        self.obs.gauge("serve/slots_occupied",
+                       sum(s is not None for s in self.slots))
         # park empty lanes on a scratch position
         for i, s in enumerate(self.slots):
             if s is None:
@@ -235,25 +266,49 @@ class ServingEngine:
         active = [s for s in self.slots if s is not None]
         if not active:
             return
-        logits, self.cache = self._decode(
-            self.params, self.cache, self._tokens, self._positions
-        )
-        self._key, sub = jax.random.split(self._key)
-        # per-slot temperature: sample both and select (cheap at CPU scale)
-        greedy = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        sampled = sample_token(logits[:, 0], sub, temperature=1.0)
-        for state in list(active):
-            i = state.slot
-            req = state.request
-            tok = int(sampled[i] if req.temperature > 0 else greedy[i])
-            state.generated.append(tok)
-            state.position += 1
-            self._tokens = self._tokens.at[i, 0].set(tok)
-            self._positions = self._positions.at[i].set(state.position)
-            hit_eos = req.eos_token is not None and tok == req.eos_token
-            if (len(state.generated) >= req.max_new_tokens or hit_eos
-                    or state.position >= self.max_len - 1):
-                state.done = True
-                state.t_done = time.time()
-                self.finished[req.request_id] = state
-                self.slots[i] = None
+        t_step = self.obs.now()
+        with self.obs.span("decode/step", active=len(active)):
+            logits, self.cache = self._decode(
+                self.params, self.cache, self._tokens, self._positions
+            )
+            self._key, sub = jax.random.split(self._key)
+            # per-slot temperature: sample both and select (cheap at CPU
+            # scale)
+            greedy = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            sampled = sample_token(logits[:, 0], sub, temperature=1.0)
+            for state in list(active):
+                i = state.slot
+                req = state.request
+                tok = int(sampled[i] if req.temperature > 0 else greedy[i])
+                state.generated.append(tok)
+                state.position += 1
+                self._tokens = self._tokens.at[i, 0].set(tok)
+                self._positions = self._positions.at[i].set(state.position)
+                hit_eos = req.eos_token is not None and tok == req.eos_token
+                if (len(state.generated) >= req.max_new_tokens or hit_eos
+                        or state.position >= self.max_len - 1):
+                    state.done = True
+                    state.t_done = self.obs.now()
+                    self._finish(state)
+                    self.slots[i] = None
+        # the step latency amortizes over every lane that got a token, so
+        # the histogram reads as per-token decode latency
+        self.obs.histogram("serve/token_latency_s",
+                           self.obs.now() - t_step)
+        self.obs.counter("serve/tokens_generated", len(active))
+        self.obs.gauge("serve/slots_occupied",
+                       sum(s is not None for s in self.slots))
+        self.obs.tick_drift()
+
+    def _finish(self, state: RequestState) -> None:
+        req = state.request
+        self.finished[req.request_id] = state
+        n_tok = len(state.generated)
+        self.obs.event("request/finish", request_id=req.request_id,
+                       tokens=n_tok,
+                       reason=("eos" if req.eos_token is not None and
+                               state.generated[-1] == req.eos_token
+                               else "length"))
+        wall = state.t_done - state.t_enqueue
+        if wall > 0:
+            self.obs.histogram("serve/tokens_per_s", n_tok / wall)

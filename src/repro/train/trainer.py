@@ -8,7 +8,6 @@ end-to-end (examples/train_lm.py); the same class drives the production mesh
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -21,6 +20,7 @@ from repro.distributed.sharding import (
     params_partition_specs,
 )
 from repro.models.config import ModelConfig
+from repro.obs import resolve as _obs_resolve
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import StragglerMonitor
 from repro.train.steps import TrainHyper, init_train_state, make_train_step
@@ -37,6 +37,7 @@ class Trainer:
         seed: int = 0,
         log_every: int = 10,
         checkpoint_every: int = 100,
+        obs: Any = None,
     ):
         self.cfg = cfg
         self.hyper = hyper
@@ -44,6 +45,7 @@ class Trainer:
         self.mesh = mesh
         self.log_every = log_every
         self.checkpoint_every = checkpoint_every
+        self.obs = _obs_resolve(obs)
         self.monitor = StragglerMonitor()
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
         self.metrics_log: List[Dict[str, float]] = []
@@ -99,15 +101,23 @@ class Trainer:
         start = int(state["step"])
         for step in range(start, num_steps):
             batch = self.dataset.batch_at(step)
-            t0 = time.time()
-            if self._rules_ctx is not None:
-                with self._rules_ctx():
+            t0 = self.obs.now()
+            with self.obs.span("train/step", step=step):
+                if self._rules_ctx is not None:
+                    with self._rules_ctx():
+                        state, metrics = self._step(state, batch)
+                else:
                     state, metrics = self._step(state, batch)
-            else:
-                state, metrics = self._step(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+                jax.block_until_ready(metrics["loss"])
+            dt = self.obs.now() - t0
             self.monitor.record(step, dt)
+            self.obs.histogram("train/step_s", dt)
+            if self.obs.enabled:
+                # the float() host-read is free here (loss is already
+                # ready) but stays off the disabled path entirely
+                self.obs.gauge("train/loss", float(metrics["loss"]))
+                self.obs.counter("train/steps")
+            self.obs.tick_drift()
             if step % self.log_every == 0 or step == num_steps - 1:
                 row = {k: float(v) for k, v in metrics.items()}
                 row.update(step=step, sec_per_step=dt)

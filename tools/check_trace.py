@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Validate a repro.obs JSONL trace: schema, record shape, lifecycle coverage.
+
+    PYTHONPATH=src python tools/check_trace.py trace.jsonl \
+        [--require-spans prefill,decode/step] [--require-events ...]
+
+Checks (the CI ``obs-smoke`` job gates on these):
+
+* first record is a ``meta`` header with ``schema == repro.obs.trace/v1``
+  and a provenance stamp (backend/device_kind/interpret/jax_version);
+* every record parses as JSON and has the right fields for its type
+  (spans: name/ts_us/dur_us, events: name/ts_us, both: dict attrs);
+* span durations are non-negative and timestamps non-decreasing per type
+  is NOT required (spans are emitted at close, so starts interleave) —
+  but every ts_us must be a finite number;
+* the required lifecycle names are present. Defaults cover a serve run:
+  ``request/submit -> request/admit -> prefill -> decode/step ->
+  request/finish``;
+* the trace converts to a Chrome ``traceEvents`` dict (what Perfetto
+  loads) without error.
+
+Exit code 0 = valid, 1 = failures (each printed on its own line).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+REQUIRED_EVENTS = ("request/submit", "request/admit", "request/finish")
+REQUIRED_SPANS = ("prefill", "decode/step")
+PROVENANCE_KEYS = ("backend", "device_kind", "interpret", "jax_version")
+
+
+def check_trace(path, require_events=REQUIRED_EVENTS,
+                require_spans=REQUIRED_SPANS):
+    """Return a list of human-readable failure strings (empty = valid)."""
+    errors = []
+    try:
+        lines = Path(path).read_text().splitlines()
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    records = []
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            records.append(json.loads(line))
+        except ValueError as e:
+            errors.append(f"line {i + 1}: not valid JSON ({e})")
+    if not records:
+        return errors + ["trace is empty"]
+
+    meta = records[0]
+    if meta.get("type") != "meta":
+        errors.append("first record must be the meta header, got "
+                      f"type={meta.get('type')!r}")
+    else:
+        from repro.obs import TRACE_SCHEMA
+
+        if meta.get("schema") != TRACE_SCHEMA:
+            errors.append(f"meta.schema is {meta.get('schema')!r}, "
+                          f"expected {TRACE_SCHEMA!r}")
+        prov = meta.get("provenance")
+        if not isinstance(prov, dict):
+            errors.append("meta.provenance missing or not a dict")
+        else:
+            for key in PROVENANCE_KEYS:
+                if key not in prov:
+                    errors.append(f"meta.provenance missing {key!r}")
+
+    names = {"span": set(), "event": set()}
+    for i, rec in enumerate(records[1:], start=2):
+        kind = rec.get("type")
+        if kind not in ("span", "event", "meta"):
+            errors.append(f"record {i}: unknown type {kind!r}")
+            continue
+        if kind == "meta":
+            errors.append(f"record {i}: duplicate meta header")
+            continue
+        if not isinstance(rec.get("name"), str) or not rec["name"]:
+            errors.append(f"record {i}: missing name")
+            continue
+        ts = rec.get("ts_us")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            errors.append(f"record {i} ({rec['name']}): bad ts_us {ts!r}")
+        if not isinstance(rec.get("attrs", {}), dict):
+            errors.append(f"record {i} ({rec['name']}): attrs not a dict")
+        if kind == "span":
+            dur = rec.get("dur_us")
+            if not isinstance(dur, (int, float)) or not math.isfinite(dur) \
+                    or dur < 0:
+                errors.append(
+                    f"record {i} ({rec['name']}): bad dur_us {dur!r}")
+        names[kind].add(rec["name"])
+
+    for name in require_events:
+        if name not in names["event"]:
+            errors.append(f"required event {name!r} never recorded "
+                          f"(saw: {sorted(names['event'])})")
+    for name in require_spans:
+        if name not in names["span"]:
+            errors.append(f"required span {name!r} never recorded "
+                          f"(saw: {sorted(names['span'])})")
+
+    try:
+        from repro.obs import chrome_trace
+
+        chrome = chrome_trace(records)
+        if not chrome.get("traceEvents"):
+            errors.append("chrome conversion produced no traceEvents")
+    except Exception as e:  # noqa: BLE001 - report, don't crash the gate
+        errors.append(f"chrome conversion failed: {e}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace file to validate")
+    ap.add_argument("--require-events",
+                    default=",".join(REQUIRED_EVENTS),
+                    help="comma-separated event names that must appear")
+    ap.add_argument("--require-spans",
+                    default=",".join(REQUIRED_SPANS),
+                    help="comma-separated span names that must appear")
+    args = ap.parse_args(argv)
+    split = lambda s: tuple(x for x in s.split(",") if x)
+    errors = check_trace(args.trace,
+                         require_events=split(args.require_events),
+                         require_spans=split(args.require_spans))
+    if errors:
+        print(f"TRACE CHECK FAILURES ({args.trace}):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"trace OK: {args.trace}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
