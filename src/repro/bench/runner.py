@@ -85,6 +85,13 @@ def analytic_cost(est_name: str, plan, batch: int,
         flops = 4.0 * batch * d * slots      # stage 1: complex projections
         flops += sum(4.0 * batch * c * c for c in plan.counts)  # stage 2
         weight_elems = 2 * k * fs * d + 2 * fs * fs
+    elif est_name == "structured":
+        # Per occupied (stack, degree) slot: diag mult (m) + butterfly WHT
+        # (m log2 m adds) + second diag (m) + product accumulate (m) — the
+        # O(F log d) sublinear apply that motivates the family.
+        m = plan.d_pad
+        flops = batch * plan.total_slots * m * (np.log2(max(m, 2)) + 3.0)
+        weight_elems = 2 * k * plan.total_stacks * m   # packed d1/d2
     else:  # third-party family: generic product-feature model
         flops = 2.0 * batch * d * slots
         weight_elems = k * out_dim * d
@@ -423,6 +430,33 @@ def autotune_cell(shape: ShapeSpec, est_name: str, precision: str,
         return kcommon.autotune_feature_blocks(
             "tensor_sketch", launch, d, k, b, f_pad,
             dtype=cd, candidates=cands, repeats=repeats)
+    if est_name == "structured":
+        from repro.kernels.structured_feature.ops import (
+            structured_feature_fused,
+        )
+        from repro.structured.plan import pack_structured
+
+        m = plan.d_pad
+        d1, d2 = pack_structured(plan, fm.params)
+        d1, d2 = d1.astype(cd), d2.astype(cd)
+        deg = jnp.asarray(plan.padded_column_degrees())
+        sc = jnp.asarray(plan.padded_column_scales())
+        xp = jnp.pad(x, ((0, 0), (0, m - shape.d)))
+        cols = plan.padded_num_cols
+        launch = lambda bm, bf: structured_feature_fused(
+            xp, d1, d2, deg, sc, interpret=interpret, blocks=(bm, bf))
+        # feature tiles must hold whole stacks: snap the ladder to
+        # multiples of d_pad and dedupe collapsed candidates
+        cands = sorted({(bm, max(m, bf - bf % m))
+                        for bm, bf in kcommon.feasible_feature_blocks(
+                            m, k, b, cols, weight_tensors=2,
+                            accumulators=4,
+                            itemsize=kcommon.dtype_itemsize(cd))},
+                       reverse=True)
+        return kcommon.autotune_feature_blocks(
+            "structured_feature", launch, m, k, b, cols,
+            dtype=cd, weight_tensors=2, accumulators=4,
+            candidates=cands, repeats=repeats)
     return None
 
 

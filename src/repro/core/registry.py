@@ -248,6 +248,19 @@ def _ctr_apply(plan, params, x, *, accum_dtype=jnp.float32, use_pallas=None,
                           precision=precision)
 
 
+def _structured_apply(plan, params, x, *, accum_dtype=jnp.float32,
+                      use_pallas=None, interpret=None, precision=None):
+    """Protocol ``apply`` for "structured": ``x [..., d] ->
+    [..., plan.output_dim]`` via ``structured.plan.apply_structured_plan``
+    (butterfly-WHT Hadamard stacks; pack_structured re-runs per call —
+    same caching note as the other families)."""
+    from repro.structured.plan import apply_structured_plan
+
+    return apply_structured_plan(plan, params, x, accum_dtype=accum_dtype,
+                                 use_pallas=use_pallas, interpret=interpret,
+                                 precision=precision)
+
+
 def _rm_pack_fused(plan, params):
     """Protocol ``pack_fused`` for "rm": the packed ``[max_degree, F, d]``
     omega tensor plus the per-column degree/scale vectors (host numpy —
@@ -308,6 +321,30 @@ def _make_ctr_entry() -> Estimator:
     )
 
 
+def _make_structured_entry() -> Estimator:
+    """Factory for the "structured" (Hadamard, Choromanski & Sindhwani
+    2016) entry. ``fused_attention_supported`` stays False: the family's
+    whole point is NOT materializing dense ``[max_degree, F, d]`` rows, so
+    it has no ``pack_fused`` layout — the attention/MLA/serving layers
+    take the two-launch composition."""
+    from repro.structured.feature_map import make_structured_feature_map
+    from repro.structured.plan import (
+        init_structured_params,
+        make_structured_plan,
+    )
+
+    return Estimator(
+        name="structured",
+        make_plan=make_structured_plan,
+        init_params=init_structured_params,
+        apply=_structured_apply,
+        make_map=make_structured_feature_map,
+        output_dim=_plan_output_dim,
+        truncation_bias=_plan_truncation_bias,
+    )
+
+
 _BUILTIN_FACTORIES["rm"] = _make_rm_entry
 _BUILTIN_FACTORIES["tensor_sketch"] = _make_ts_entry
 _BUILTIN_FACTORIES["ctr"] = _make_ctr_entry
+_BUILTIN_FACTORIES["structured"] = _make_structured_entry

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the perf-critical compute of the paper's technique.
 
-Four kernels (each with an ``ops.py`` jit'd wrapper + a pure-jnp oracle):
+Five kernels (each with an ``ops.py`` jit'd wrapper + a pure-jnp oracle):
 
   * ``rm_feature``     — fused Random-Maclaurin feature map application
                          (projection + degree-product, VMEM-tiled,
@@ -11,6 +11,10 @@ Four kernels (each with an ``ops.py`` jit'd wrapper + a pure-jnp oracle):
   * ``ctr_feature``    — fused complex-to-real application (masked complex
                          running product, stacked Re/Im output halves;
                          oracle in ``repro.ctr.ref``, DESIGN.md §11).
+  * ``structured_feature`` — fused Hadamard-structured application
+                         (in-VMEM butterfly WHT of diagonally-signed
+                         inputs + masked running product; oracle in
+                         ``repro.structured.ref``, DESIGN.md §15).
   * ``rm_attention``   — chunked causal linear attention over any
                          estimator's features (the intra-chunk masked
                          [C,C] x [C,dv] hot loop).
@@ -23,6 +27,7 @@ from repro.kernels.rm_feature import ops as rm_feature_ops
 from repro.kernels.rm_attention import ops as rm_attention_ops
 from repro.kernels.tensor_sketch import ops as tensor_sketch_ops
 from repro.kernels.ctr_feature import ops as ctr_feature_ops
+from repro.kernels.structured_feature import ops as structured_feature_ops
 
 __all__ = ["rm_feature_ops", "rm_attention_ops", "tensor_sketch_ops",
-           "ctr_feature_ops"]
+           "ctr_feature_ops", "structured_feature_ops"]

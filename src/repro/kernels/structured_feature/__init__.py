@@ -1,0 +1,6 @@
+from repro.kernels.structured_feature.ops import structured_feature_fused
+from repro.kernels.structured_feature.structured_feature import (
+    structured_feature_fused_pallas,
+)
+
+__all__ = ["structured_feature_fused", "structured_feature_fused_pallas"]

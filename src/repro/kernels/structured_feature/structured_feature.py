@@ -1,0 +1,115 @@
+"""Pallas TPU kernel for fused structured (Hadamard) feature application.
+
+``structured_feature_fused_pallas`` applies every degree bucket of a
+``StructuredPlan`` in ONE launch (DESIGN.md §15): a masked running product
+over degree slots — the ``rm_feature_fused`` loop — where slot j's
+projection is not an MXU matmul against drawn rows but the in-VMEM
+butterfly Walsh-Hadamard transform of the diagonally-signed input,
+
+    P_j = reshape( d2_j ∘ WHT( d1_j ∘ x ) ),
+
+computed per (batch, stack) tile in O(d_pad log d_pad) adds on the VPU —
+the sublinear-time structure of Choromanski & Sindhwani (2016). The
+butterfly matches the SYLVESTER Hadamard order exactly (the dense-matmul
+oracle in ``repro.structured.ref`` is the ground truth), unrolling
+log2(d_pad) reshape+concat stages at trace time.
+
+The grid tiles (batch, stack): each feature tile covers ``block_s`` whole
+stacks of ``d_pad`` columns, so the signed transforms broadcast cleanly and
+the per-column degree/scale metadata stays a flat ``[1, block_s * d_pad]``
+row. Columns are laid out in ascending degree order, so each tile's loop
+exits at the TILE's max depth, not the global one. The accumulator is an
+fp32 VMEM buffer; bf16 inputs are widened once on load (bf16-in /
+fp32-accum, same policy as the other feature kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wht(v: jax.Array) -> jax.Array:
+    """Butterfly Walsh-Hadamard transform along the last axis (length a
+    power of two, static): Sylvester order, unnormalized (+-1 entries).
+    Unrolls at trace time — log2(m) reshape/concat stages."""
+    bm, bs, m = v.shape
+    h = 1
+    while h < m:
+        v = v.reshape(bm, bs, m // (2 * h), 2, h)
+        a = v[:, :, :, 0, :]
+        b = v[:, :, :, 1, :]
+        v = jnp.concatenate([a + b, a - b], axis=-1).reshape(bm, bs, m)
+        h *= 2
+    return v
+
+
+def _structured_fused_kernel(x_ref, d1_ref, d2_ref, deg_ref, scale_ref,
+                             o_ref):
+    # Widen once on load: the WHT is pure adds/subs, so fp32 intermediates
+    # keep the running product exactly fp32-accumulated under bf16 inputs.
+    x = x_ref[...].astype(jnp.float32)            # [bm, m]
+    deg = deg_ref[...]                            # [1, bs * m] int32
+    k, bs, m = d1_ref.shape
+    bm = x.shape[0]
+
+    def step(j, acc):
+        d1 = pl.load(d1_ref, (pl.ds(j, 1), slice(None), slice(None)))
+        d1 = d1.reshape(bs, m).astype(jnp.float32)
+        d2 = pl.load(d2_ref, (pl.ds(j, 1), slice(None), slice(None)))
+        d2 = d2.reshape(bs, m).astype(jnp.float32)
+        u = x[:, None, :] * d1[None]              # [bm, bs, m]
+        v = _wht(u) * d2[None]
+        p = v.reshape(bm, bs * m)
+        keep = j < deg
+        return jnp.where(keep, acc * p, acc)
+
+    depth = jnp.max(deg)                          # tile-local product depth
+    acc = jax.lax.fori_loop(
+        0, depth, step, jnp.ones((bm, bs * m), jnp.float32)
+    )
+    scale = scale_ref[...].astype(jnp.float32)
+    o_ref[...] = (acc * scale).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_s", "interpret")
+)
+def structured_feature_fused_pallas(
+    x: jax.Array,          # [B, d_pad]          (B pre-padded to block_b)
+    d1: jax.Array,         # [max_degree, S, d_pad]  (S pre-padded to block_s)
+    d2: jax.Array,         # [max_degree, S, d_pad]
+    col_deg: jax.Array,    # [S * d_pad] int32   (padding stacks: 0)
+    col_scale: jax.Array,  # [S * d_pad] float32 (padding stacks: 0)
+    *,
+    block_b: int = 256,
+    block_s: int = 8,
+    interpret: bool = False,
+) -> jax.Array:            # [B, S * d_pad] float32
+    """One launch over (batch, stack) tiles; feature tiles are whole stacks.
+
+    ``col_deg``/``col_scale`` are per PADDED column (``S * d_pad`` entries,
+    stack-major) — the ops-layer wrapper builds them from the plan and
+    slices off both the pad stacks and each bucket's surplus columns after
+    the launch, keeping the kernel free of bucket bookkeeping.
+    """
+    b, m = x.shape
+    k, s, _ = d1.shape
+    assert b % block_b == 0 and s % block_s == 0, (b, s, block_b, block_s)
+    grid = (b // block_b, s // block_s)
+    return pl.pallas_call(
+        _structured_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_s, m), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((k, block_s, m), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((1, block_s * m), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_s * m), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_s * m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s * m), jnp.float32),
+        interpret=interpret,
+    )(x, d1, d2, col_deg.reshape(1, s * m), col_scale.reshape(1, s * m))

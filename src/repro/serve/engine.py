@@ -19,6 +19,7 @@ state updates are pure jax ops on pytrees that can carry shardings.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -173,12 +174,29 @@ class ServingEngine:
         self.obs.gauge("serve/queue_depth", len(self.queue))
 
     def run(self, max_iters: int = 10_000) -> Dict[int, RequestState]:
+        """Drive admission + decode until drained (or ``max_iters``).
+
+        Returns the finished-request map. If ``max_iters`` expires with
+        requests still queued or mid-decode, the run is TRUNCATED: those
+        requests stay in ``self.queue`` / ``self.slots`` (no entry in the
+        returned map), a ``RuntimeWarning`` is emitted, and the
+        ``serve/truncated`` counter records how many were left behind —
+        callers distinguishing a drained run from a truncated one check
+        either signal (docs/serving.md).
+        """
         it = 0
         while (self.queue or any(s is not None for s in self.slots)) \
                 and it < max_iters:
             self._admit()
             self._decode_iteration()
             it += 1
+        pending = len(self.queue) + sum(s is not None for s in self.slots)
+        if pending:
+            warnings.warn(
+                f"ServingEngine.run hit max_iters={max_iters} with "
+                f"{pending} request(s) still pending; returned results "
+                "are truncated", RuntimeWarning, stacklevel=2)
+            self.obs.counter("serve/truncated", pending)
         return self.finished
 
     # -- internals --------------------------------------------------------------
@@ -227,14 +245,30 @@ class ServingEngine:
             # first generated token from the LAST REAL prefill logit
             self._key, sub = jax.random.split(self._key)
             tok = sample_token(logits[:, t - 1], sub, req.temperature)
-            state.generated.append(int(tok[0]))
+            tok_i = int(tok[0])
+            state.generated.append(tok_i)
             state.t_first_token = self.obs.now()
             self.obs.histogram("serve/ttft_s",
                                state.t_first_token - state.t_enqueue)
+            self.obs.gauge("serve/queue_depth", len(self.queue))
+            # the prefill-sampled token can already terminate the request
+            # (EOS, max_new_tokens=1, or a prompt that fills the cache):
+            # finish WITHOUT occupying the decode lane, and hand the slot
+            # back for the next queued request this same admission pass.
+            hit_eos = req.eos_token is not None and tok_i == req.eos_token
+            if (hit_eos or len(state.generated) >= req.max_new_tokens
+                    or t >= self.max_len - 1):
+                state.done = True
+                state.t_done = self.obs.now()
+                self._finish(state, "eos" if hit_eos else (
+                    "max_new_tokens"
+                    if len(state.generated) >= req.max_new_tokens
+                    else "cache_full"))
+                free.insert(0, slot)
+                continue
             self._tokens = self._tokens.at[slot, 0].set(tok[0])
             self._positions = self._positions.at[slot].set(t)
             self.slots[slot] = state
-            self.obs.gauge("serve/queue_depth", len(self.queue))
         self.obs.gauge("serve/slots_occupied",
                        sum(s is not None for s in self.slots))
         # park empty lanes on a scratch position
@@ -272,10 +306,19 @@ class ServingEngine:
                 self.params, self.cache, self._tokens, self._positions
             )
             self._key, sub = jax.random.split(self._key)
-            # per-slot temperature: sample both and select (cheap at CPU
-            # scale)
+            # per-slot temperature: scale each lane's logits by its
+            # request's temperature, then ONE batched categorical; greedy
+            # (temperature <= 0) lanes take the argmax instead. Division
+            # by the 1.0 placeholder is exact, so all-default batches are
+            # bit-identical to an unscaled sample.
+            temps = np.ones((len(self.slots),), np.float32)
+            for state in active:
+                if state.request.temperature > 0:
+                    temps[state.slot] = state.request.temperature
             greedy = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-            sampled = sample_token(logits[:, 0], sub, temperature=1.0)
+            sampled = sample_token(
+                logits[:, 0] / jnp.asarray(temps)[:, None], sub,
+                temperature=1.0)
             for state in list(active):
                 i = state.slot
                 req = state.request
@@ -289,7 +332,10 @@ class ServingEngine:
                         or state.position >= self.max_len - 1):
                     state.done = True
                     state.t_done = self.obs.now()
-                    self._finish(state)
+                    self._finish(state, "eos" if hit_eos else (
+                        "max_new_tokens"
+                        if len(state.generated) >= req.max_new_tokens
+                        else "cache_full"))
                     self.slots[i] = None
         # the step latency amortizes over every lane that got a token, so
         # the histogram reads as per-token decode latency
@@ -300,15 +346,17 @@ class ServingEngine:
                        sum(s is not None for s in self.slots))
         self.obs.tick_drift()
 
-    def _finish(self, state: RequestState) -> None:
+    def _finish(self, state: RequestState, reason: str) -> None:
+        """Record a finished request. ``reason`` is the ACTUAL stopping
+        condition threaded from the caller — "eos" | "max_new_tokens" |
+        "cache_full" — not inferred from the last token, so a length-
+        stopped request whose final token coincides with EOS, or a cache
+        exhaustion, are labeled truthfully."""
         req = state.request
         self.finished[req.request_id] = state
         n_tok = len(state.generated)
         self.obs.event("request/finish", request_id=req.request_id,
-                       tokens=n_tok,
-                       reason=("eos" if req.eos_token is not None and
-                               state.generated[-1] == req.eos_token
-                               else "length"))
+                       tokens=n_tok, reason=reason)
         wall = state.t_done - state.t_enqueue
         if wall > 0:
             self.obs.histogram("serve/tokens_per_s", n_tok / wall)

@@ -1,0 +1,45 @@
+"""repro.structured — the Hadamard-structured estimator subsystem
+(DESIGN.md §15).
+
+A fourth random-feature family for the paper's dot-product kernels, driven
+by the SAME Taylor-coefficient degree measures as Random Maclaurin but
+built from D2·H·D1 projection stacks (Choromanski & Sindhwani, *Recycling
+Randomness with Structure for Sublinear time Kernel Expansions*, 2016):
+diagonal Rademacher signs around an in-VMEM butterfly Walsh-Hadamard
+transform replace the dense i.i.d. draws, cutting the apply cost from
+O(dF) to O(F log d) and the parameter count from ``sum_n c_n n d`` dense
+rows to ``2 d_pad`` signs per degree slot — at per-column distribution
+IDENTICAL to RM (each Hadamard-structured column is exactly one Rademacher
+projection; only within-stack cross-column correlation differs, see
+DESIGN.md §15). Registered as ``"structured"`` in the estimator registry
+(``repro.core.registry``); consumers pick estimators by name.
+"""
+from repro.structured.plan import (
+    StructuredPlan,
+    apply_structured_plan,
+    init_structured_params,
+    make_structured_plan,
+    pack_structured,
+)
+from repro.structured.feature_map import (
+    StructuredFeatureMap,
+    make_structured_feature_map,
+)
+from repro.structured.ref import (
+    hadamard_matrix,
+    structured_blocks_ref,
+    structured_feature_fused_ref,
+)
+
+__all__ = [
+    "StructuredPlan",
+    "apply_structured_plan",
+    "init_structured_params",
+    "make_structured_plan",
+    "pack_structured",
+    "StructuredFeatureMap",
+    "make_structured_feature_map",
+    "hadamard_matrix",
+    "structured_blocks_ref",
+    "structured_feature_fused_ref",
+]

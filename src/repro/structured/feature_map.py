@@ -1,0 +1,145 @@
+"""StructuredFeatureMap — a materialized Hadamard-structured feature map.
+
+The structured counterpart of ``core.feature_map.RMFeatureMap`` /
+``ctr.feature_map.CtrFeatureMap``: a thin carrier of (``plan``, ``params``)
+with the same duck-typed surface (``__call__`` / ``apply`` / ``output_dim``
+/ ``estimate_gram`` / ``truncation_bias``), so every downstream consumer —
+``train_featurized_linear``, benchmarks, examples, the sharded execution
+layer — takes any registry family without special-casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maclaurin import DotProductKernel
+from repro.structured.plan import (
+    StructuredPlan,
+    apply_structured_plan,
+    init_structured_params,
+    make_structured_plan,
+)
+
+__all__ = ["StructuredFeatureMap", "make_structured_feature_map"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StructuredFeatureMap:
+    """(plan, diagonal sign draws) pair; rides through jit/pjit closures
+    like the other map objects."""
+
+    plan: StructuredPlan
+    params: Dict[str, jax.Array]   # {"d1": [slots, d_pad], "d2": [...]}
+
+    # -- pytree plumbing ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.params,), (self.plan,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (params,) = children
+        (plan,) = aux
+        return cls(plan=plan, params=params)
+
+    # -- metadata -------------------------------------------------------------
+    @property
+    def input_dim(self) -> int:
+        return self.plan.input_dim
+
+    @property
+    def num_random(self) -> int:
+        return self.plan.num_random
+
+    @property
+    def output_dim(self) -> int:
+        return self.plan.output_dim
+
+    def truncation_bias(self, radius: float) -> float:
+        """Worst-case dropped-degree mass (paper §4.2); see
+        ``StructuredPlan.truncation_bias``."""
+        return self.plan.truncation_bias(radius)
+
+    # -- application ----------------------------------------------------------
+    def __call__(self, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+        """Pure-jnp (dense-WHT oracle) path, mirroring
+        ``RMFeatureMap.__call__``."""
+        return apply_structured_plan(self.plan, self.params, x,
+                                     accum_dtype=accum_dtype,
+                                     use_pallas=False)
+
+    def apply(
+        self,
+        x: jax.Array,
+        *,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        accum_dtype=jnp.float32,
+        precision=None,
+    ) -> jax.Array:
+        """Backend-routed path: fused Pallas launch on TPU, oracle off.
+
+        ``precision`` ("fp32" | "bf16") is the feature-kernel input dtype
+        policy — bf16 inputs/packed signs, fp32 accumulation either way.
+        """
+        return apply_structured_plan(self.plan, self.params, x,
+                                     accum_dtype=accum_dtype,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret,
+                                     precision=precision)
+
+    def estimate_gram(
+        self,
+        X: jax.Array,
+        Y: Optional[jax.Array] = None,
+        *,
+        row_chunk: int = 4096,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        axis_name: Optional[str] = None,
+        precision=None,
+    ) -> jax.Array:
+        """Kernel-matrix estimate via row-chunked fused featurization.
+
+        Same plain ``Z(X) Z(Y)^T`` every family uses. ``axis_name``: inside
+        a feature-sharded ``shard_map``, psum the partial Gram over that
+        mesh axis (DESIGN.md §10). ``precision`` applies the feature-kernel
+        dtype policy to the featurization; the Gram matmul stays fp32.
+        """
+        from repro.core.registry import estimate_gram
+
+        return estimate_gram(
+            lambda Z: self.apply(Z, use_pallas=use_pallas,
+                                 interpret=interpret, precision=precision),
+            X, Y, row_chunk=row_chunk, axis_name=axis_name,
+        )
+
+
+def make_structured_feature_map(
+    kernel: DotProductKernel,
+    input_dim: int,
+    num_features: int,
+    key: jax.Array,
+    *,
+    p: float = 2.0,
+    measure: str = "geometric",
+    h01: bool = False,
+    n_max: int = 24,
+    radius: float = 1.0,
+    omega_dtype=jnp.float32,
+    stratified: bool = True,
+    seed: int = 0,
+) -> StructuredFeatureMap:
+    """Build a ``StructuredFeatureMap`` (same signature as
+    ``make_feature_map``)."""
+    plan = make_structured_plan(
+        kernel, input_dim, num_features,
+        p=p, measure=measure, h01=h01, n_max=n_max, radius=radius,
+        stratified=stratified, seed=seed,
+    )
+    return StructuredFeatureMap(
+        plan=plan, params=init_structured_params(plan, key, omega_dtype)
+    )

@@ -1,0 +1,107 @@
+"""jnp reference paths for the structured (Hadamard) estimator.
+
+Two oracles (DESIGN.md §15), both emitting the PADDED random section
+(``total_stacks * d_pad`` columns — surplus columns carry zero scale); the
+deterministic prefix columns and the per-bucket surplus slice live in
+``apply_structured_plan``:
+
+* ``structured_blocks_ref`` — the production off-TPU path: the dense-WHT
+  matmul formulation. Per degree bucket, slot j of every stack computes
+  ``(x ∘ d1_j) @ H * d2_j`` with the materialized Sylvester Hadamard
+  matrix (H is symmetric, so the right-matmul equals ``H (d1_j ∘ x)``),
+  then multiplies slots. Ground truth for the fused kernel.
+* ``structured_feature_fused_ref`` — the exact jnp mirror of the Pallas
+  kernel's masked running product on the packed ``pack_structured``
+  tensors. Used for raw array-level parity tests of
+  ``structured_feature_fused``.
+
+Column layout (both): buckets ascending, stack-major within a bucket —
+stack i of a bucket owns its columns ``[i * d_pad, (i+1) * d_pad)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.structured.plan import StructuredPlan
+
+__all__ = [
+    "hadamard_matrix",
+    "structured_blocks_ref",
+    "structured_feature_fused_ref",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(m: int) -> np.ndarray:
+    """Unnormalized Sylvester Walsh-Hadamard matrix ``[m, m]`` (+-1 float32,
+    symmetric). ``m`` must be a power of two."""
+    if m & (m - 1):
+        raise ValueError(f"Hadamard size must be a power of two, got {m}")
+    h = np.ones((1, 1), np.float32)
+    while h.shape[0] < m:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def structured_blocks_ref(
+    plan: StructuredPlan, params: Dict[str, jax.Array], x: jax.Array
+) -> jax.Array:
+    """All degree buckets via dense WHT matmuls:
+    ``x [B, d] -> [B, plan.padded_num_cols]`` float32.
+
+    Stack i of bucket n emits the d_pad columns
+    ``scale_n * prod_{j<n} (d2_ij ∘ H (d1_ij ∘ x_pad))`` — surplus columns
+    (beyond the bucket's c_n) come out as exact zeros via the zero tail of
+    ``padded_column_scales``.
+    """
+    m = plan.d_pad
+    xf = x.astype(jnp.float32)
+    xf = jnp.pad(xf, ((0, 0), (0, m - plan.input_dim)))
+    if plan.padded_num_cols == 0:
+        return jnp.zeros((xf.shape[0], 0), jnp.float32)
+    hmat = jnp.asarray(hadamard_matrix(m))
+    cols, off = [], 0
+    for n, s in zip(plan.degrees, plan.stacks_per_bucket):
+        d1 = params["d1"][off : off + s * n].astype(jnp.float32)
+        d2 = params["d2"][off : off + s * n].astype(jnp.float32)
+        off += s * n
+        d1 = d1.reshape(s, n, m)
+        d2 = d2.reshape(s, n, m)
+        u = xf[:, None, None, :] * d1[None]                # [B, s, n, m]
+        v = (u @ hmat) * d2[None]                          # H symmetric
+        z = jnp.prod(v, axis=2)                            # [B, s, m]
+        cols.append(z.reshape(xf.shape[0], s * m))
+    out = jnp.concatenate(cols, axis=-1)
+    scale = jnp.asarray(plan.padded_column_scales())
+    return out * scale[None, :]
+
+
+def structured_feature_fused_ref(
+    x: jax.Array,          # [B, d_pad] (zero-padded to the Hadamard size)
+    d1: jax.Array,         # [max_degree, S, d_pad]    (pack_structured)
+    d2: jax.Array,         # [max_degree, S, d_pad]
+    col_deg: jax.Array,    # [S * d_pad] int32 per-column product depth
+    col_scale: jax.Array,  # [S * d_pad] per-column scale (0 on surplus)
+) -> jax.Array:            # [B, S * d_pad] float32
+    """jnp mirror of the fused kernel: masked running product of WHT slots.
+
+    Column f is ``col_scale[f] * prod_{j < col_deg[f]} (d2[j] ∘ H (d1[j] ∘
+    x))_f`` — identical ordering and masking to
+    ``structured_feature_fused_pallas``, via the dense H matmul.
+    """
+    xf = x.astype(jnp.float32)
+    k, s, m = d1.shape
+    hmat = jnp.asarray(hadamard_matrix(m))
+    acc = jnp.ones((xf.shape[0], s * m), jnp.float32)
+    for j in range(k):
+        u = xf[:, None, :] * d1[j][None].astype(jnp.float32)   # [B, s, m]
+        v = (u @ hmat) * d2[j][None].astype(jnp.float32)
+        p = v.reshape(xf.shape[0], s * m)
+        keep = (j < col_deg)[None, :]
+        acc = jnp.where(keep, acc * p, acc)
+    return acc * col_scale[None, :].astype(jnp.float32)

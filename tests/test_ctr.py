@@ -213,8 +213,9 @@ def test_ctr_gram_mse_leq_rm_at_matched_budget():
 # ---------------------------------------------------------------------------
 # registry threading (no consumer-side special-casing)
 # ---------------------------------------------------------------------------
-def test_registry_lists_all_three():
-    assert set(registry.list_estimators()) == {"rm", "tensor_sketch", "ctr"}
+def test_registry_lists_all_families():
+    assert set(registry.list_estimators()) == {
+        "rm", "tensor_sketch", "ctr", "structured"}
 
 
 def test_make_feature_map_estimator_kwarg_ctr():

@@ -80,6 +80,178 @@ def test_engine_rm_mode_runs(setup):
     assert all(len(s.generated) == 4 for s in done.values())
 
 
+def _submit_n(engine, cfg, n, *, size=5, seed=7, **req_kw):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        engine.submit(Request(request_id=i,
+                              prompt=rng.integers(0, cfg.vocab_size,
+                                                  size=size),
+                              **req_kw))
+
+
+def _sampled_rollout_reference(cfg, params, prompt, n_new, temperature,
+                               rng_seed=0):
+    """Temperature decode via repeated FULL forward passes, replaying the
+    engine's key discipline (one split per admit, one per decode step)."""
+    from repro.serve.sampler import sample_token
+
+    key = jax.random.PRNGKey(rng_seed)
+    tokens = list(int(t) for t in prompt)
+    out = []
+    for step in range(n_new):
+        batch = {"tokens": jnp.asarray([tokens], jnp.int32)}
+        logits, _ = forward(params, cfg, batch)
+        key, sub = jax.random.split(key)
+        if step == 0:   # prefill samples at the raw request temperature
+            tok = int(sample_token(logits[:, -1], sub, temperature)[0])
+        else:           # decode: pre-scaled logits, shared T=1 categorical
+            tok = int(sample_token(logits[:, -1] / temperature, sub, 1.0)[0])
+        out.append(tok)
+        tokens.append(tok)
+    return out
+
+
+@pytest.mark.parametrize("temperature", [0.25, 4.0])
+def test_decode_respects_per_request_temperature(setup, temperature):
+    """Regression: _decode_iteration used to sample every lane at a
+    hardcoded temperature=1.0, so any request with 0 < T != 1 got the
+    right distribution for its first (prefill-sampled) token and the
+    wrong one for every subsequent token. The engine stream must equal
+    the temperature-scaled reference rollout under the shared seed —
+    under the old bug the decode tokens come from the T=1.0 categorical
+    and diverge from this reference."""
+    cfg, params = setup
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab_size, size=6)
+    want = _sampled_rollout_reference(cfg, params, prompt, 8, temperature,
+                                      rng_seed=0)
+
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=64, rng_seed=0)
+    engine.submit(Request(request_id=0, prompt=prompt, max_new_tokens=8,
+                          temperature=temperature))
+    got = engine.run()[0].generated
+    assert got == want, (temperature, got, want)
+
+
+def test_hot_and_cold_streams_diverge(setup):
+    """Same seed, different temperatures: the cold (0.25) and hot (4.0)
+    streams must differ — under the old shared-T=1.0 decode both followed
+    one categorical sequence."""
+    cfg, params = setup
+
+    def gen(temperature):
+        engine = ServingEngine(cfg, params, num_slots=1, max_len=64,
+                               rng_seed=123)
+        _submit_n(engine, cfg, 1, temperature=temperature,
+                  max_new_tokens=12)
+        return engine.run()[0].generated
+
+    cold, hot = gen(0.25), gen(4.0)
+    assert len(cold) == len(hot) == 12
+    assert cold != hot
+
+
+def test_max_new_tokens_one_yields_exactly_one_token(setup):
+    """Regression: _admit appended the prefill-sampled token without
+    checking max_new_tokens, so max_new_tokens=1 returned 2 tokens and
+    burned a decode iteration."""
+    from repro.obs import Obs, clock
+
+    cfg, params = setup
+    obs = Obs(clock=clock.FakeClock(),
+              provenance={"backend": "test", "device_kind": "test",
+                          "device_count": 1, "interpret": False,
+                          "jax_version": "0"})
+    engine = ServingEngine(cfg, params, num_slots=2, max_len=64, obs=obs)
+    _submit_n(engine, cfg, 3, max_new_tokens=1)
+    done = engine.run()
+    assert all(len(done[i].generated) == 1 for i in range(3))
+    # the decode lane is never occupied: no decode/step span at all
+    names = [r["name"] for r in obs.tracer.records if r["type"] != "meta"]
+    assert "decode/step" not in names
+    finishes = obs.tracer.events("request/finish")
+    assert [e["attrs"]["reason"] for e in finishes] == ["max_new_tokens"] * 3
+    obs.close()
+
+
+def test_eos_first_token_finishes_without_decode(setup):
+    """Regression: an EOS prefill-sampled token used to occupy a lane and
+    burn a decode iteration anyway. Probe the deterministic greedy first
+    token, then resubmit with eos_token pinned to it."""
+    from repro.obs import Obs, clock
+
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, size=5)
+
+    probe = ServingEngine(cfg, params, num_slots=1, max_len=64)
+    probe.submit(Request(request_id=0, prompt=prompt, max_new_tokens=1))
+    first = probe.run()[0].generated[0]
+
+    obs = Obs(clock=clock.FakeClock(),
+              provenance={"backend": "test", "device_kind": "test",
+                          "device_count": 1, "interpret": False,
+                          "jax_version": "0"})
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=64, obs=obs)
+    engine.submit(Request(request_id=0, prompt=prompt, max_new_tokens=8,
+                          eos_token=int(first)))
+    done = engine.run()
+    assert done[0].generated == [first]
+    names = [r["name"] for r in obs.tracer.records if r["type"] != "meta"]
+    assert "decode/step" not in names
+    finishes = obs.tracer.events("request/finish")
+    assert [e["attrs"]["reason"] for e in finishes] == ["eos"]
+    obs.close()
+
+
+def test_cache_exhaustion_reports_cache_full(setup):
+    """A request whose budget outlives the decode cache stops at the cache
+    boundary and says so — cache_full used to be indistinguishable from
+    "length" (and mislabeled "eos" on a coinciding last token)."""
+    from repro.obs import Obs, clock
+
+    cfg, params = setup
+    obs = Obs(clock=clock.FakeClock(),
+              provenance={"backend": "test", "device_kind": "test",
+                          "device_count": 1, "interpret": False,
+                          "jax_version": "0"})
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=16, obs=obs)
+    _submit_n(engine, cfg, 1, size=10, max_new_tokens=32)
+    done = engine.run()
+    # positions 10..14 decode (15 is the scratch slot): 1 prefill token +
+    # 5 decode tokens
+    assert len(done[0].generated) == 6
+    finishes = obs.tracer.events("request/finish")
+    assert [e["attrs"]["reason"] for e in finishes] == ["cache_full"]
+    obs.close()
+
+
+def test_run_warns_and_counts_on_max_iters_truncation(setup):
+    """Regression: run() used to return normally when max_iters expired
+    with work still pending — indistinguishable from a drained run."""
+    from repro.obs import Obs, clock
+
+    cfg, params = setup
+    obs = Obs(clock=clock.FakeClock(),
+              provenance={"backend": "test", "device_kind": "test",
+                          "device_count": 1, "interpret": False,
+                          "jax_version": "0"})
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=64, obs=obs)
+    _submit_n(engine, cfg, 3, max_new_tokens=8)
+    with pytest.warns(RuntimeWarning, match="max_iters=2.*truncated"):
+        done = engine.run(max_iters=2)
+    # slot 0's request is mid-decode and two more are queued
+    assert len(done) == 0
+    assert obs.metrics.snapshot()["counters"]["serve/truncated"] == 3.0
+    # a subsequent unbounded run drains cleanly with no further warning
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        done = engine.run()
+    assert len(done) == 3
+    obs.close()
+
+
 def test_engine_rejects_encoder(setup):
     cfg = get_config("hubert-xlarge", smoke=True)
     with pytest.raises(ValueError, match="encoder-only"):

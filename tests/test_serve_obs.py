@@ -59,7 +59,7 @@ def test_lifecycle_event_sequence_on_fake_clock(setup):
     assert all(e["attrs"]["bucket"] == 32 for e in admits)
     finishes = obs.tracer.events("request/finish")
     assert [e["attrs"]["tokens"] for e in finishes] == [2, 2]
-    assert all(e["attrs"]["reason"] == "length" for e in finishes)
+    assert all(e["attrs"]["reason"] == "max_new_tokens" for e in finishes)
     for sp in obs.tracer.spans("prefill"):
         assert sp["attrs"]["bucket"] == 32 and sp["attrs"]["prompt_len"] == 5
         assert sp["dur_us"] > 0

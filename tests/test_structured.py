@@ -1,0 +1,322 @@
+"""Structured (Hadamard) estimator subsystem: kernel parity, variance,
+registry protocol, integration.
+
+Covers (DESIGN.md §15):
+  * the butterfly WHT inside the fused Pallas kernel vs the materialized
+    Sylvester Hadamard matrix (order AND values);
+  * fused Pallas kernel (interpret mode) vs the dense-WHT matmul oracle to
+    1e-5 on the kernel zoo, plus ONE-launch accounting;
+  * per-column RM-equivalence: a single structured column's projection is
+    distributed exactly like one Rademacher row (unbiasedness inherits);
+  * the ISSUE-8 acceptance claim: at a matched real feature budget the
+    structured Gram MSE on the exponential kernel is <= Random Maclaurin's
+    (deterministic seeds);
+  * registry threading: ``make_feature_map(estimator="structured")``,
+    attention forward, and the serving engine with no consumer-side
+    special-casing.
+
+Reproducibility: every statistical test draws from PINNED PRNG seeds, so
+tier-1 results are identical across runs and machines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    HomogeneousPolynomialKernel,
+    PolynomialKernel,
+    VovkRealKernel,
+    make_feature_map,
+    registry,
+)
+from repro.kernels.structured_feature import structured_feature_fused
+from repro.structured import (
+    StructuredFeatureMap,
+    StructuredPlan,
+    hadamard_matrix,
+    init_structured_params,
+    make_structured_feature_map,
+    make_structured_plan,
+    pack_structured,
+    structured_blocks_ref,
+    structured_feature_fused_ref,
+)
+
+KERNELS = [
+    ExponentialDotProductKernel(1.0),
+    PolynomialKernel(3, 1.0),
+    HomogeneousPolynomialKernel(2),
+    VovkRealKernel(4),
+]
+
+
+# ---------------------------------------------------------------------------
+# plan geometry
+# ---------------------------------------------------------------------------
+def test_plan_pads_to_hadamard_size_and_slices_surplus():
+    kern = ExponentialDotProductKernel(1.0)
+    plan = make_structured_plan(kern, 10, 192, measure="proportional")
+    assert plan.d_pad == 16
+    assert plan.output_dim == 192
+    # every bucket funds whole stacks; surplus columns carry scale 0
+    m = plan.d_pad
+    for c, s in zip(plan.counts, plan.stacks_per_bucket):
+        assert s == -(-c // m)
+    scales = plan.padded_column_scales()
+    degs = plan.padded_column_degrees()
+    assert scales.shape == degs.shape == (plan.padded_num_cols,)
+    assert int((scales > 0).sum()) == plan.num_random_cols
+    # packed tensors: one (d1, d2) pair per degree slot, not per column
+    params = init_structured_params(plan, jax.random.PRNGKey(0))
+    assert params["d1"].shape == (plan.total_slots, m)
+    assert set(np.unique(np.asarray(params["d1"]))) <= {-1.0, 1.0}
+    d1, d2 = pack_structured(plan, params)
+    assert d1.shape == d2.shape == (plan.max_degree, plan.total_stacks, m)
+    # sublinear parameter count: far fewer random entries than RM's
+    # sum_n c_n * n * d dense rows at the same budget
+    rm_rows = sum(c * n for c, n in zip(plan.counts, plan.degrees))
+    assert 2 * plan.total_slots * m < rm_rows * plan.input_dim
+
+
+def test_power_of_two_input_needs_no_padding():
+    kern = ExponentialDotProductKernel(1.0)
+    plan = make_structured_plan(kern, 16, 128)
+    assert plan.d_pad == 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 16)) * 0.3
+    params = init_structured_params(plan, jax.random.PRNGKey(1))
+    est = registry.get("structured")
+    z = est.apply(plan, params, x, use_pallas=False)
+    assert z.shape == (5, plan.output_dim)
+    assert np.isfinite(np.asarray(z)).all()
+
+
+# ---------------------------------------------------------------------------
+# Hadamard transform ground truth
+# ---------------------------------------------------------------------------
+def test_butterfly_wht_matches_sylvester_matrix():
+    """The kernel's trace-time butterfly equals the dense Sylvester H on
+    random inputs for every size used by the test zoo."""
+    from repro.kernels.structured_feature.structured_feature import _wht
+
+    for m in (1, 2, 4, 8, 16, 32):
+        h = hadamard_matrix(m)
+        assert np.allclose(h @ h.T, m * np.eye(m))      # orthogonal, +-1
+        v = jax.random.normal(jax.random.PRNGKey(m), (3, 2, m))
+        want = np.asarray(v) @ h                         # H symmetric
+        got = np.asarray(_wht(jnp.asarray(v)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_single_column_is_one_rademacher_projection():
+    """Column f of one stack slot is ``<h_f ∘ d1, x>`` — exactly one
+    +-1-row projection (the per-column RM-equivalence that carries RM's
+    unbiasedness and scales over, DESIGN.md §15)."""
+    kern = HomogeneousPolynomialKernel(1)   # degree-1 only: no products
+    plan = make_structured_plan(kern, 8, 8)
+    assert plan.degrees == (1,) and plan.d_pad == 8
+    params = init_structured_params(plan, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (6, 8))
+    z = structured_blocks_ref(plan, params, x)
+    h = hadamard_matrix(8)
+    d1 = np.asarray(params["d1"][0])
+    d2 = np.asarray(params["d2"][0])
+    scale = plan.padded_column_scales()
+    for f in range(8):
+        row = h[f] * d1                       # h_f ∘ d1: a +-1 row
+        want = np.asarray(x) @ row * d2[f] * scale[f]
+        np.testing.assert_allclose(np.asarray(z[:, f]), want,
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_fused_matches_oracle_on_kernel_zoo(kern):
+    fm = make_structured_feature_map(kern, 11, 160, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, 11)) * 0.3
+    want = fm(x)
+    got = fm.apply(x, use_pallas=True, interpret=True)
+    assert got.shape == (9, fm.output_dim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_raw_parity_on_packed_tensors():
+    """Array-level parity of the ops wrapper against the jnp mirror on the
+    padded column layout (leading batch dims included)."""
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_structured_feature_map(kern, 13, 96, jax.random.PRNGKey(5))
+    plan = fm.plan
+    d1, d2 = pack_structured(plan, fm.params)
+    cd = jnp.asarray(plan.padded_column_degrees())
+    cs = jnp.asarray(plan.padded_column_scales())
+    x = jax.random.normal(jax.random.PRNGKey(6), (3, 5, 13)) * 0.25
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, plan.d_pad - 13)))
+    want = structured_feature_fused_ref(xp.reshape(-1, plan.d_pad),
+                                        d1, d2, cd, cs)
+    got = structured_feature_fused(xp, d1, d2, cd, cs,
+                                   use_pallas=True, interpret=True)
+    assert got.shape == (3, 5, plan.padded_num_cols)
+    np.testing.assert_allclose(np.asarray(got).reshape(-1, want.shape[-1]),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_structured_fused_is_one_pallas_launch():
+    """Every degree bucket — all stacks, all depths — ONE launch."""
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_structured_feature_map(kern, 16, 256, jax.random.PRNGKey(0))
+    assert len(fm.plan.degrees) > 1
+    x = jnp.ones((4, 16)) * 0.1
+
+    def count_in(jaxpr):
+        total = 0
+        for eqn in jaxpr.eqns:
+            if "pallas" in eqn.primitive.name:
+                total += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    total += count_in(v.jaxpr)
+                elif hasattr(v, "eqns"):
+                    total += count_in(v)
+        return total
+
+    fn = lambda xx: fm.apply(xx, use_pallas=True, interpret=True)
+    assert count_in(jax.make_jaxpr(fn)(x).jaxpr) == 1
+
+
+def test_explicit_blocks_and_bf16_policy():
+    """Caller-pinned blocks snap to whole stacks; the bf16 policy rounds
+    only the inputs (signs are exact), with fp32 accumulation keeping the
+    result close to the fp32 path."""
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_structured_feature_map(kern, 10, 128, jax.random.PRNGKey(7))
+    plan = fm.plan
+    d1, d2 = pack_structured(plan, fm.params)
+    cd = jnp.asarray(plan.padded_column_degrees())
+    cs = jnp.asarray(plan.padded_column_scales())
+    x = jax.random.normal(jax.random.PRNGKey(8), (7, 10)) * 0.3
+    xp = jnp.pad(x, ((0, 0), (0, plan.d_pad - 10)))
+    want = structured_feature_fused_ref(xp, d1, d2, cd, cs)
+    got = structured_feature_fused(xp, d1, d2, cd, cs, use_pallas=True,
+                                   interpret=True, blocks=(8, 24))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    z32 = fm.apply(x, use_pallas=True, interpret=True)
+    z16 = fm.apply(x, use_pallas=True, interpret=True, precision="bf16")
+    assert z16.dtype == jnp.float32            # accumulator stays fp32
+    np.testing.assert_allclose(np.asarray(z16), np.asarray(z32),
+                               rtol=0.1, atol=0.05)
+
+
+def test_edge_plans_apply_cleanly():
+    kern = PolynomialKernel(3, 1.0)
+    x = jax.random.normal(jax.random.PRNGKey(9), (7, 6)) * 0.3
+    # const-only plan: no randomness at all
+    tiny = make_structured_feature_map(kern, 6, 1, jax.random.PRNGKey(1))
+    z = tiny.apply(x, use_pallas=True, interpret=True)
+    assert z.shape == (7, tiny.output_dim)
+    # fully degenerate: a_0 = 0 (no prefix) AND no bucket funded -> a
+    # valid 0-column map, not a concat error
+    empty = make_structured_feature_map(HomogeneousPolynomialKernel(3), 6,
+                                        0, jax.random.PRNGKey(1))
+    assert empty.output_dim == 0
+    assert empty(x).shape == (7, 0)
+    assert empty.apply(x, use_pallas=True, interpret=True).shape == (7, 0)
+    # iid (paper-faithful) allocation mode
+    fm = make_structured_feature_map(kern, 6, 64, jax.random.PRNGKey(2),
+                                     stratified=False, seed=3)
+    assert fm.plan.seed == 3
+    np.testing.assert_allclose(
+        np.asarray(fm.apply(x, use_pallas=True, interpret=True)),
+        np.asarray(fm(x)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# statistics
+# ---------------------------------------------------------------------------
+def test_structured_gram_estimates_kernel():
+    """Averaged over maps, the structured Gram approaches the exact Gram,
+    and the residual shrinks as the budget grows."""
+    kern = ExponentialDotProductKernel(1.0)
+    d = 12
+    X = jax.random.normal(jax.random.PRNGKey(0), (10, d))
+    X = X / jnp.linalg.norm(X, axis=1, keepdims=True) * 0.8
+    K = np.asarray(kern.gram(X))
+
+    def err(F, n_maps=8):
+        grams = []
+        for s in range(n_maps):
+            fm = make_structured_feature_map(kern, d, F,
+                                             jax.random.PRNGKey(s),
+                                             measure="proportional")
+            grams.append(np.asarray(fm.estimate_gram(X)))
+        return np.abs(np.mean(grams, axis=0) - K).max()
+
+    e_small, e_big = err(64), err(1024)
+    assert e_big < e_small
+    assert e_big < 0.15 * np.abs(K).max()
+
+
+def test_structured_gram_mse_leq_rm_at_matched_budget():
+    """ISSUE-8 acceptance: deterministic variance comparison — the
+    structured Gram MSE on the exponential kernel is <= Random
+    Maclaurin's at the SAME feature budget F (the within-stack Hadamard
+    coupling is variance-reducing here, measured ~3x lower — DESIGN.md
+    §15). Fixed seeds."""
+    kern = ExponentialDotProductKernel(1.0)
+    d, F, n_draws = 8, 256, 60
+    X = jax.random.normal(jax.random.PRNGKey(0), (12, d))
+    X = X / jnp.linalg.norm(X, axis=1, keepdims=True) * 0.9
+    K = np.asarray(kern.gram(X))
+
+    mse = {}
+    for name in ("rm", "structured"):
+        errs = []
+        for s in range(n_draws):
+            fm = make_feature_map(kern, d, F, jax.random.PRNGKey(1000 + s),
+                                  estimator=name, measure="proportional")
+            G = np.asarray(fm.estimate_gram(X))
+            errs.append(np.mean((G - K) ** 2))
+        mse[name] = float(np.mean(errs))
+
+    assert mse["structured"] <= mse["rm"], mse
+
+
+# ---------------------------------------------------------------------------
+# registry threading (no consumer-side special-casing)
+# ---------------------------------------------------------------------------
+def test_make_feature_map_estimator_kwarg_structured():
+    kern = PolynomialKernel(3, 1.0)
+    fm = make_feature_map(kern, 10, 64, jax.random.PRNGKey(0),
+                          estimator="structured")
+    assert isinstance(fm, StructuredFeatureMap)
+    assert isinstance(fm.plan, StructuredPlan)
+    assert fm.output_dim == 64
+
+
+def test_attention_and_engine_with_structured():
+    from repro.configs import get_config
+    from repro.models.transformer import forward, init_model
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = get_config("qwen3-1.7b", smoke=True, attention_mode="rm",
+                     estimator="structured")
+    assert cfg.rm.estimator == "structured"
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.ones((2, 16), jnp.int32),
+        "positions": jnp.tile(jnp.arange(16), (2, 1)),
+    }
+    logits, _ = forward(params, cfg, batch)
+    assert logits.shape[:2] == (2, 16)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=64)
+    assert eng.estimator == "structured"
+    eng.submit(Request(0, np.arange(5, dtype=np.int32) % 7,
+                       max_new_tokens=4))
+    done = eng.run(max_iters=50)
+    assert len(done[0].generated) == 4
