@@ -13,9 +13,11 @@ from repro.bench.schema import (
     ATTN_REQUIRED_CELL_KEYS,
     REQUIRED_CELL_KEYS,
     SCHEMA_VERSION,
+    SERVING_SCHEMA_VERSION,
     cell_key,
     check_file,
     check_payload,
+    check_serving_payload,
     diff_coverage,
 )
 from repro.bench.spec import (
@@ -45,10 +47,12 @@ __all__ = [
     "analytic_cost",
     "attention_hbm_bytes",
     "SCHEMA_VERSION",
+    "SERVING_SCHEMA_VERSION",
     "REQUIRED_CELL_KEYS",
     "ATTN_REQUIRED_CELL_KEYS",
     "cell_key",
     "check_payload",
+    "check_serving_payload",
     "check_file",
     "diff_coverage",
 ]

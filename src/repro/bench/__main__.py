@@ -28,6 +28,10 @@ def _warn_if_interpret_cpu(path: str) -> None:
         payload = json.loads(Path(path).read_text())
     except (OSError, ValueError):
         return
+    if payload.get("kind") == "serving":
+        # serving artifacts time the scheduler (often on a fake clock),
+        # not Pallas kernels — the interpret nag doesn't apply
+        return
     prov = payload.get("provenance", {})
     backend = prov.get("backend", payload.get("backend"))
     interpret = payload.get("interpret", prov.get("interpret"))

@@ -1,0 +1,336 @@
+"""Open-loop serving load generator + SLO accounting (``BENCH_serving.json``).
+
+The serving analogue of the core bench grid: drive the continuous-batching
+:class:`~repro.serve.scheduler.Scheduler` with an OPEN-LOOP arrival
+process (requests arrive on a schedule that does not wait for the server —
+the honest way to measure saturation; a closed loop self-throttles and
+hides queueing collapse) and account per-request SLOs:
+
+  * **TTFT** — submit-to-first-token, p50/p99 across requests;
+  * **inter-token latency** — successive-token gaps, p50/p99 pooled over
+    every request's token timestamps;
+  * **tokens/sec at saturation** — decode throughput measured ONLY over
+    steps where every slot was busy, so idle tail steps can't flatter the
+    number (plus the overall figure for contrast).
+
+Arrivals come from :func:`poisson_trace` (seeded exponential
+inter-arrivals) or a JSONL trace file (:func:`load_trace` /
+:func:`save_trace`), so production traces replay through the same harness.
+Everything reads the injectable ``repro.obs`` clock: under ``FakeClock``
+the whole run — arrivals, queueing, SLO percentiles — is deterministic,
+which is how the CI ``serve-sim`` job gates the ``BENCH_serving.json``
+schema-v1 artifact (``python -m repro.bench --check``) without timing
+noise.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.bench.loadgen --quick --fake-clock \
+        --out BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Arrival",
+    "SERVING_SCHEMA_VERSION",
+    "load_trace",
+    "poisson_trace",
+    "run_load",
+    "save_trace",
+    "serving_payload",
+    "slo_summary",
+]
+
+# mirrored by repro.bench.schema.check_serving_payload
+SERVING_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled request: WHEN it arrives and WHAT it asks for.
+
+    Prompt tokens are not stored — they are derived deterministically from
+    ``(prompt_seed, request_id, prompt_len)`` at run time, so trace files
+    stay tiny and replays are exact.
+    """
+
+    t: float                       # arrival time (harness clock seconds)
+    request_id: int
+    prompt_len: int
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    priority: int = 0
+
+
+def poisson_trace(rate: float, num_requests: int, *, seed: int = 0,
+                  prompt_len_range=(4, 24), max_new_range=(4, 16),
+                  temperature_choices: Sequence[float] = (0.0,),
+                  priority_choices: Sequence[int] = (0,)) -> List[Arrival]:
+    """Seeded open-loop Poisson arrivals: Exp(rate) inter-arrival gaps."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(num_requests):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(Arrival(
+            t=t, request_id=i,
+            prompt_len=int(rng.integers(*prompt_len_range)),
+            max_new_tokens=int(rng.integers(*max_new_range)),
+            temperature=float(rng.choice(np.asarray(temperature_choices))),
+            priority=int(rng.choice(np.asarray(priority_choices)))))
+    return out
+
+
+def save_trace(path, arrivals: Sequence[Arrival]) -> None:
+    """Write an arrival trace as JSONL (one request per line)."""
+    with open(path, "w") as f:
+        for a in arrivals:
+            f.write(json.dumps(dataclasses.asdict(a)) + "\n")
+
+
+def load_trace(path) -> List[Arrival]:
+    """Read a JSONL arrival trace; validates ordering and uniqueness."""
+    out = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(Arrival(**json.loads(line)))
+            except (ValueError, TypeError) as e:
+                raise ValueError(f"{path}:{ln}: bad trace record ({e})")
+    if any(b.t < a.t for a, b in zip(out, out[1:])):
+        raise ValueError(f"{path}: arrival times must be non-decreasing")
+    if len({a.request_id for a in out}) != len(out):
+        raise ValueError(f"{path}: duplicate request_id in trace")
+    return out
+
+
+def _prompt_for(arrival: Arrival, vocab_size: int, prompt_seed: int):
+    rng = np.random.default_rng((prompt_seed, arrival.request_id))
+    return rng.integers(0, vocab_size, size=arrival.prompt_len)
+
+
+def run_load(scheduler, arrivals: Sequence[Arrival], *, clock=None,
+             prompt_seed: int = 0, max_steps: int = 100_000) -> Dict:
+    """Open-loop drive: submit each arrival at its scheduled time, step
+    until drained, return raw accounting (per-request states + per-step
+    infos) for :func:`slo_summary`.
+
+    ``clock`` is the harness clock object — the SAME one behind the
+    scheduler's ``obs`` — consulted for "has request i arrived yet".  When
+    it exposes ``advance`` (``FakeClock``) and the scheduler goes idle
+    before the next arrival, time jumps straight to it (a real clock would
+    spin-step; under the fake clock the jump keeps runs deterministic AND
+    models the idle gap for queue-age/TTFT accounting).
+    """
+    from repro.serve import Request
+
+    obs = scheduler.obs
+    clock = clock if clock is not None else obs.now
+    now_fn = clock if callable(clock) else clock.now  # FakeClock is callable
+    vocab = scheduler.cfg.vocab_size
+    pending = list(arrivals)
+    steps: List[Any] = []
+    submitted = 0
+    while (pending or scheduler.pending()) and len(steps) < max_steps:
+        now = now_fn()
+        while pending and pending[0].t <= now:
+            a = pending.pop(0)
+            scheduler.submit(Request(
+                request_id=a.request_id,
+                prompt=_prompt_for(a, vocab, prompt_seed),
+                max_new_tokens=a.max_new_tokens,
+                temperature=a.temperature,
+                priority=a.priority))
+            submitted += 1
+        if not scheduler.pending():
+            if pending and hasattr(clock, "advance"):
+                gap = pending[0].t - now_fn()
+                if gap > 0:
+                    clock.advance(gap)
+            continue
+        steps.append(scheduler.step())
+    truncated = (len(pending)
+                 + scheduler.queue_depth
+                 + sum(s is not None for s in scheduler.slots))
+    return {
+        "finished": dict(scheduler.finished),
+        "steps": steps,
+        "submitted": submitted,
+        "truncated": truncated,
+        "num_slots": scheduler.num_slots,
+    }
+
+
+def _pct(vals: Sequence[float]) -> Dict[str, float]:
+    arr = np.asarray(sorted(vals), dtype=np.float64)
+    if arr.size == 0:
+        return {"p50": float("nan"), "p99": float("nan"),
+                "mean": float("nan"), "n": 0}
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p99": float(np.percentile(arr, 99)),
+        "mean": float(arr.mean()),
+        "n": int(arr.size),
+    }
+
+
+def slo_summary(raw: Dict) -> Dict:
+    """Collapse :func:`run_load` accounting into the SLO block of the
+    serving artifact (see module docstring for metric definitions)."""
+    finished = raw["finished"]
+    steps = raw["steps"]
+    num_slots = raw["num_slots"]
+    ttfts = [s.t_first_token - s.t_enqueue for s in finished.values()
+             if s.t_first_token is not None]
+    inter = [b - a for s in finished.values()
+             for a, b in zip(s.t_tokens, s.t_tokens[1:])]
+    total_tokens = sum(len(s.generated) for s in finished.values())
+
+    sat = [st for st in steps if st.active == num_slots]
+    sat_tokens = sum(st.new_tokens for st in sat)
+    sat_wall = sum(st.t_end - st.t_start for st in sat)
+    all_wall = sum(st.t_end - st.t_start for st in steps)
+    return {
+        "ttft_s": _pct(ttfts),
+        "inter_token_s": _pct(inter),
+        "tokens_per_s_saturated": (
+            sat_tokens / sat_wall if sat_wall > 0 else float("nan")),
+        "tokens_per_s_overall": (
+            total_tokens / all_wall if all_wall > 0 else float("nan")),
+        "saturated_steps": len(sat),
+        "total_steps": len(steps),
+        "requests_submitted": raw["submitted"],
+        "requests_finished": len(finished),
+        "requests_truncated": raw["truncated"],
+        "total_tokens": total_tokens,
+        "finish_reasons": {
+            r: sum(1 for s in finished.values() if s.finish_reason == r)
+            for r in sorted({s.finish_reason for s in finished.values()})},
+    }
+
+
+def serving_payload(slo: Dict, workload: Dict,
+                    provenance: Optional[Dict] = None) -> Dict:
+    """Assemble the schema-v1 ``BENCH_serving.json`` payload."""
+    if provenance is None:
+        from repro.common.env import platform_provenance
+
+        provenance = platform_provenance()
+    return {
+        "kind": "serving",
+        "schema_version": SERVING_SCHEMA_VERSION,
+        "provenance": provenance,
+        "workload": workload,
+        "slo": slo,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench.loadgen",
+        description="open-loop serving load generator (SLO artifact)")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke config + small workload (CI serve-sim)")
+    ap.add_argument("--fake-clock", action="store_true",
+                    help="deterministic FakeClock: arrival times and SLO "
+                         "percentiles become exactly reproducible")
+    ap.add_argument("--estimator", default=None,
+                    help="feature-estimator registry name")
+    ap.add_argument("--attention-mode", default=None,
+                    choices=[None, "exact", "rm"])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate (requests per clock second)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a JSONL arrival trace instead of Poisson")
+    ap.add_argument("--save-trace", default=None, metavar="FILE",
+                    help="write the generated arrival trace as JSONL")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"])
+    args = ap.parse_args(argv)
+
+    if args.platform:
+        from repro.common import env
+
+        env.set_platform(args.platform)
+
+    import jax
+
+    from repro import obs as obs_mod
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.obs import clock as clock_mod
+    from repro.serve import Scheduler
+
+    if args.quick:
+        args.requests = min(args.requests, 12)
+    cfg = get_config(args.arch, smoke=args.quick,
+                     attention_mode=args.attention_mode,
+                     estimator=args.estimator)
+    params = init_model(cfg, jax.random.PRNGKey(args.seed))
+
+    clk = clock_mod.FakeClock(step=0.01) if args.fake_clock else None
+    obs = obs_mod.Obs(clock=clk)
+    sched = Scheduler(cfg, params, num_slots=args.slots,
+                      max_len=args.max_len, rng_seed=args.seed, obs=obs)
+
+    if args.trace:
+        arrivals = load_trace(args.trace)
+    else:
+        arrivals = poisson_trace(args.rate, args.requests, seed=args.seed)
+    if args.save_trace:
+        save_trace(args.save_trace, arrivals)
+        print(f"wrote trace -> {args.save_trace}")
+
+    raw = run_load(sched, arrivals, clock=clk, prompt_seed=args.seed)
+    slo = slo_summary(raw)
+    payload = serving_payload(slo, workload={
+        "arch": args.arch, "scheduler": "continuous",
+        "num_slots": args.slots, "max_len": args.max_len,
+        "rate": args.rate, "num_requests": len(arrivals),
+        "seed": args.seed, "quick": bool(args.quick),
+        "fake_clock": bool(args.fake_clock),
+        "trace": args.trace,
+    })
+    obs.close()
+    Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    print(f"[loadgen] {slo['requests_finished']}/{slo['requests_submitted']}"
+          f" finished, ttft p50={slo['ttft_s']['p50']:.3f}s "
+          f"p99={slo['ttft_s']['p99']:.3f}s, "
+          f"tok/s saturated={slo['tokens_per_s_saturated']:.2f} "
+          f"({slo['saturated_steps']}/{slo['total_steps']} steps), "
+          f"overall={slo['tokens_per_s_overall']:.2f}")
+
+    from repro.bench import schema
+
+    errors = schema.check_serving_payload(payload)
+    if errors:
+        print("WARNING: fresh serving payload fails its own check:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

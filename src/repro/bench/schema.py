@@ -16,11 +16,14 @@ from typing import Dict, List, Optional, Sequence
 
 __all__ = [
     "SCHEMA_VERSION",
+    "SERVING_SCHEMA_VERSION",
     "REQUIRED_CELL_KEYS",
     "ATTN_REQUIRED_CELL_KEYS",
+    "SERVING_REQUIRED_SLO_KEYS",
     "cell_key",
     "check_payload",
     "check_file",
+    "check_serving_payload",
     "diff_coverage",
 ]
 
@@ -134,6 +137,77 @@ def check_payload(
     return errors
 
 
+# ---------------------------------------------------------------------------
+# BENCH_serving.json (schema v1): the loadgen SLO artifact. Identified by
+# ``"kind": "serving"`` — ``check_file``/``--check`` auto-dispatch on it.
+# ---------------------------------------------------------------------------
+SERVING_SCHEMA_VERSION = 1
+
+# Every percentile block must carry these.
+_SERVING_PCT_KEYS = ("p50", "p99", "mean", "n")
+
+# Top-level slo cells the serve-sim gate requires. The two throughput
+# figures are scalars; ttft/inter-token are percentile blocks.
+SERVING_REQUIRED_SLO_KEYS = (
+    "ttft_s",
+    "inter_token_s",
+    "tokens_per_s_saturated",
+    "tokens_per_s_overall",
+    "saturated_steps",
+    "total_steps",
+    "requests_submitted",
+    "requests_finished",
+    "requests_truncated",
+)
+
+_SERVING_REQUIRED_WORKLOAD_KEYS = (
+    "arch", "scheduler", "num_slots", "max_len", "num_requests", "seed")
+
+
+def check_serving_payload(payload: Dict) -> List[str]:
+    """Schema/coverage violations for a ``BENCH_serving.json`` payload.
+
+    Mirrors the bench-core gate: a missing SLO cell (a percentile that
+    silently fell out of the loadgen) fails CI rather than shrinking the
+    artifact.
+    """
+    errors: List[str] = []
+    if payload.get("kind") != "serving":
+        errors.append(f"kind {payload.get('kind')!r} != 'serving'")
+    if payload.get("schema_version") != SERVING_SCHEMA_VERSION:
+        errors.append(
+            f"serving schema_version {payload.get('schema_version')!r} != "
+            f"{SERVING_SCHEMA_VERSION}")
+    if not isinstance(payload.get("provenance"), dict):
+        errors.append("payload has no provenance stamp")
+    workload = payload.get("workload")
+    if not isinstance(workload, dict):
+        errors.append("payload has no workload section")
+    else:
+        for k in _SERVING_REQUIRED_WORKLOAD_KEYS:
+            if k not in workload:
+                errors.append(f"workload: missing key {k!r}")
+    slo = payload.get("slo")
+    if not isinstance(slo, dict):
+        return errors + ["payload has no slo section"]
+    for k in SERVING_REQUIRED_SLO_KEYS:
+        if k not in slo:
+            errors.append(f"slo: missing cell {k!r}")
+    for pct in ("ttft_s", "inter_token_s"):
+        block = slo.get(pct)
+        if not isinstance(block, dict):
+            continue
+        for k in _SERVING_PCT_KEYS:
+            if k not in block:
+                errors.append(f"slo/{pct}: missing percentile {k!r}")
+    # a run that finished nothing has no percentiles to gate on — reject
+    # it outright so an accidentally-empty workload can't pass CI
+    if isinstance(slo.get("requests_finished"), int) \
+            and slo["requests_finished"] == 0:
+        errors.append("slo: requests_finished == 0 (empty run)")
+    return errors
+
+
 def check_file(
     path,
     *,
@@ -141,11 +215,18 @@ def check_file(
     precisions: Sequence[str] = ("fp32", "bf16"),
     min_shapes: int = 3,
 ) -> List[str]:
-    """``check_payload`` on a JSON file; unreadable file -> one error."""
+    """Schema check on a JSON artifact file; unreadable file -> one error.
+
+    Dispatches on the payload's ``kind``: ``"serving"`` artifacts get
+    :func:`check_serving_payload`, everything else the core
+    :func:`check_payload`.
+    """
     try:
         payload = json.loads(Path(path).read_text())
     except (OSError, ValueError) as e:
         return [f"{path}: unreadable ({e})"]
+    if payload.get("kind") == "serving":
+        return check_serving_payload(payload)
     return check_payload(payload, estimators=estimators,
                          precisions=precisions, min_shapes=min_shapes)
 
@@ -160,6 +241,9 @@ def diff_coverage(committed: Dict, fresh: Dict) -> List[str]:
     trajectory. Per-shape completeness is ``check_payload``'s job.
     """
     errors: List[str] = []
+    if committed.get("kind") != fresh.get("kind"):
+        return [f"artifact kind mismatch: committed "
+                f"{committed.get('kind')!r} vs fresh {fresh.get('kind')!r}"]
     if committed.get("schema_version") != fresh.get("schema_version"):
         errors.append(
             f"schema_version drift: committed "

@@ -35,7 +35,9 @@ from repro.core.compositional import (
 from repro.core.bounds import (
     HoeffdingConstants,
     constants_for,
+    pairwise_eps,
     pointwise_failure_prob,
+    required_features_for_pairs,
     required_num_features,
     uniform_failure_prob,
 )
@@ -78,6 +80,8 @@ __all__ = [
     "constants_for",
     "pointwise_failure_prob",
     "required_num_features",
+    "pairwise_eps",
+    "required_features_for_pairs",
     "uniform_failure_prob",
     "Classifier",
     "train_kernel_ridge",

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core.maclaurin import DotProductKernel
 
 __all__ = ["HoeffdingConstants", "constants_for", "required_num_features",
-           "pointwise_failure_prob", "uniform_failure_prob"]
+           "pointwise_failure_prob", "uniform_failure_prob",
+           "pairwise_eps", "required_features_for_pairs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,70 @@ class HoeffdingConstants:
         log_cover = 2.0 * self.dim * math.log(max(32.0 * self.radius * self.lipschitz / eps, 2.0))
         d_req = 8.0 * c**2 / eps**2 * (log_cover + math.log(2.0 / delta))
         return int(math.ceil(d_req))
+
+    def eps_at(self, num_features: int, delta: float,
+               measure: str = "geometric", *, tol: float = 1e-12) -> float:
+        """Invert :meth:`required_d`: the smallest uniform error ``eps``
+        Theorem 12 certifies at budget ``num_features``.
+
+        ``required_d`` is strictly decreasing in eps (the Hoeffding
+        exponent dominates the log-covering term), so the inverse is a
+        bisection; the defining round-trip property — pinned by
+        tests/test_bounds_roundtrip.py — is::
+
+            required_d(eps, delta) <= D  =>  eps_at(D, delta) <= eps
+
+        i.e. asking for the budget the bound demands always buys back an
+        error guarantee at least as tight as requested.
+        """
+        if num_features <= 0:
+            raise ValueError(f"num_features must be positive, "
+                             f"got {num_features}")
+
+        def _ok(eps: float) -> bool:
+            return self.required_d(eps, delta, measure) <= num_features
+
+        lo, hi = tol, 1.0
+        while not _ok(hi):            # error certs can exceed 1 at tiny D
+            hi *= 2.0
+            if hi > 1e12:
+                raise ValueError(
+                    f"no meaningful eps at D={num_features} "
+                    f"(delta={delta}): bound exceeds 1e12")
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if _ok(mid):
+                hi = mid
+            else:
+                lo = mid
+            if hi - lo <= tol * max(1.0, hi):
+                break
+        return hi
+
+    def pairwise_eps(self, num_features: int, n_pairs: int, delta: float,
+                     measure: str = "geometric") -> float:
+        """Hoeffding + union error bound over a FIXED set of ``n_pairs``
+        pairs at budget D (no epsilon-net): the exact inversion of
+        ``pointwise_failure_prob`` with ``delta / n_pairs`` per pair::
+
+            eps(D, delta) = sqrt(8 C^2 log(2 n_pairs / delta) / D)
+
+        This is the monitor-facing bound — ``obs.DriftMonitor`` watches
+        specific sentinel pairs, not the whole domain, so it delegates
+        here rather than to the Theorem 12 covering bound.
+        """
+        c = self.c_omega if measure == "geometric" else self.c_proportional
+        return math.sqrt(
+            8.0 * c * c * math.log(2.0 * n_pairs / delta) / num_features)
+
+    def required_features_for_pairs(self, eps: float, n_pairs: int,
+                                    delta: float,
+                                    measure: str = "geometric") -> int:
+        """Inverse of :meth:`pairwise_eps`: D such that the fixed-pair
+        union bound certifies error <= eps w.p. >= 1 - delta."""
+        c = self.c_omega if measure == "geometric" else self.c_proportional
+        return int(math.ceil(
+            8.0 * c * c * math.log(2.0 * n_pairs / delta) / eps**2))
 
 
 def constants_for(
@@ -68,6 +133,27 @@ def constants_for(
         c_proportional=c_prop,
         lipschitz=lipschitz,
     )
+
+
+def pairwise_eps(
+    kernel: DotProductKernel, radius: float, dim: int, num_features: int,
+    n_pairs: int, delta: float, p: float = 2.0,
+    measure: str = "geometric",
+) -> float:
+    """Module-level convenience for ``constants_for(...).pairwise_eps``."""
+    return constants_for(kernel, radius, dim, p).pairwise_eps(
+        num_features, n_pairs, delta, measure)
+
+
+def required_features_for_pairs(
+    kernel: DotProductKernel, radius: float, dim: int, eps: float,
+    n_pairs: int, delta: float, p: float = 2.0,
+    measure: str = "geometric",
+) -> int:
+    """Module-level convenience for
+    ``constants_for(...).required_features_for_pairs``."""
+    return constants_for(kernel, radius, dim, p).required_features_for_pairs(
+        eps, n_pairs, delta, measure)
 
 
 def pointwise_failure_prob(

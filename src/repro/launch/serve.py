@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --requests 8 --slots 4
 
+``--scheduler`` picks the frontend — ``continuous`` (default) is the
+continuous-batching Scheduler with per-step admission/eviction and
+priority queues, ``bucketed`` the deprecated batch-synchronous engine;
+``--arrival-trace`` replays a JSONL arrival trace (see
+``repro.bench.loadgen``) open-loop through the continuous scheduler.
 ``--estimator`` picks the linear-attention feature family by registry name
 (forwarded to ``get_config``, validated at engine construction);
 ``--data-parallel`` builds a host mesh and runs data-parallel decode with
@@ -25,7 +30,7 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import init_model
-from repro.serve import Request, ServingEngine
+from repro.serve import Request, Scheduler, ServingEngine
 
 
 def make_engine(
@@ -39,8 +44,15 @@ def make_engine(
     mesh=None,
     seed: int = 0,
     obs=None,
-) -> ServingEngine:
-    """Config -> params -> engine, with every override forwarded.
+    scheduler: str = "continuous",
+    buckets=None,
+):
+    """Config -> params -> serving frontend, with every override forwarded.
+
+    ``scheduler`` picks the frontend: ``"continuous"`` (default) builds the
+    continuous-batching :class:`~repro.serve.scheduler.Scheduler`;
+    ``"bucketed"`` the legacy batch-synchronous ``ServingEngine``
+    (deprecated, docs/serving.md). Both expose the same submit/run surface.
 
     The regression this guards (tests/test_serve_engine.py): ``estimator``
     must reach ``get_config`` so the engine's up-front registry validation
@@ -53,8 +65,15 @@ def make_engine(
     if not cfg.causal:
         raise ValueError(f"{arch} is encoder-only; nothing to serve")
     params = init_model(cfg, jax.random.PRNGKey(seed))
-    return ServingEngine(cfg, params, num_slots=num_slots, max_len=max_len,
-                         mesh=mesh, obs=obs)
+    if scheduler == "continuous":
+        return Scheduler(cfg, params, num_slots=num_slots, max_len=max_len,
+                         rng_seed=seed, buckets=buckets, mesh=mesh, obs=obs)
+    if scheduler == "bucketed":
+        return ServingEngine(cfg, params, num_slots=num_slots,
+                             max_len=max_len, rng_seed=seed, buckets=buckets,
+                             mesh=mesh, obs=obs)
+    raise ValueError(f"unknown scheduler {scheduler!r}: expected "
+                     "'continuous' or 'bucketed'")
 
 
 def main(argv=None):
@@ -76,6 +95,15 @@ def main(argv=None):
     ap.add_argument("--host-devices", type=int, default=0,
                     help="expose N host CPU devices via XLA_FLAGS (for "
                          "--data-parallel on one machine)")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "bucketed"],
+                    help="serving frontend: the continuous-batching "
+                         "Scheduler (default) or the deprecated "
+                         "batch-synchronous bucketed engine")
+    ap.add_argument("--arrival-trace", default=None, metavar="FILE",
+                    help="replay a JSONL arrival trace (repro.bench."
+                         "loadgen format) open-loop instead of submitting "
+                         "everything up front (continuous scheduler only)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -139,16 +167,28 @@ def main(argv=None):
     engine = make_engine(
         args.arch, smoke=args.smoke, attention_mode=args.attention_mode,
         estimator=args.estimator, num_slots=args.slots, max_len=args.max_len,
-        mesh=mesh, obs=obs,
+        mesh=mesh, obs=obs, scheduler=args.scheduler,
     )
     cfg = engine.cfg
-    rng = np.random.default_rng(0)
     t0 = time.time()
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 24)))
-        engine.submit(Request(request_id=i, prompt=prompt,
-                              max_new_tokens=args.max_new))
-    done = engine.run()
+    if args.arrival_trace:
+        if args.scheduler != "continuous":
+            raise SystemExit("--arrival-trace needs --scheduler continuous")
+        from repro.bench import loadgen
+
+        arrivals = loadgen.load_trace(args.arrival_trace)
+        raw = loadgen.run_load(engine, arrivals)
+        done = raw["finished"]
+        print(f"[serve] replayed {len(arrivals)} arrivals from "
+              f"{args.arrival_trace} ({raw['truncated']} truncated)")
+    else:
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=int(rng.integers(4, 24)))
+            engine.submit(Request(request_id=i, prompt=prompt,
+                                  max_new_tokens=args.max_new))
+        done = engine.run()
     wall = time.time() - t0
     toks = sum(len(s.generated) for s in done.values())
     print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.1f}s "

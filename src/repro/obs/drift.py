@@ -30,7 +30,6 @@ counter, a ``drift/violation`` trace event when it fires).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Optional
 
 import numpy as np
@@ -46,14 +45,16 @@ def hoeffding_eps(kernel, radius: float, dim: int, num_features: int,
     The inversion of ``core.bounds.pointwise_failure_prob`` for a FIXED
     sentinel set (n_pairs pairs) rather than the paper's epsilon-net over
     the whole domain — the right bound for a monitor that watches specific
-    points.
+    points. A thin wrapper over ``core.bounds.pairwise_eps`` (kept for the
+    monitor-facing default measure): the arithmetic lives in ONE place so
+    the online monitor and the offline (eps, delta) acceptance suite can
+    never drift apart (tests/test_bounds_roundtrip.py pins the
+    delegation).
     """
-    from repro.core.bounds import constants_for
+    from repro.core import bounds
 
-    consts = constants_for(kernel, radius, dim)
-    c = consts.c_omega if measure == "geometric" else consts.c_proportional
-    return math.sqrt(
-        8.0 * c * c * math.log(2.0 * n_pairs / delta) / num_features)
+    return bounds.pairwise_eps(kernel, radius, dim, num_features, n_pairs,
+                               delta, measure=measure)
 
 
 @dataclasses.dataclass(frozen=True)

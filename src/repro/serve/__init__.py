@@ -1,4 +1,16 @@
 from repro.serve.engine import ServingEngine, Request, RequestState
+from repro.serve.executor import DEFAULT_BUCKETS, StepExecutor, effective_buckets
 from repro.serve.sampler import sample_token
+from repro.serve.scheduler import Scheduler, StepInfo
 
-__all__ = ["ServingEngine", "Request", "RequestState", "sample_token"]
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "ServingEngine",
+    "StepExecutor",
+    "StepInfo",
+    "effective_buckets",
+    "sample_token",
+]

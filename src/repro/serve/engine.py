@@ -1,4 +1,13 @@
-"""Batched serving engine with continuous batching over fixed decode slots.
+"""Batched serving engine with bucketed prefill over fixed decode slots.
+
+.. deprecated::
+    ``ServingEngine`` is the LEGACY serving frontend. New code should use
+    :class:`repro.serve.scheduler.Scheduler` — the continuous-batching
+    scheduler with per-step admission/eviction, priority queues,
+    per-request deterministic sampling and a property-tested invariant
+    contract (tests/test_scheduler_invariants.py, docs/serving.md). The
+    engine is kept for the engine-global PRNG discipline its regression
+    tests pin and as the ``--scheduler bucketed`` fallback.
 
 Design (vLLM-style, adapted to jax's static shapes):
 
@@ -13,27 +22,22 @@ Design (vLLM-style, adapted to jax's static shapes):
     scatter — the paper's technique removes the per-token KV growth entirely
     (DESIGN.md §2).
 
-This engine is CPU-runnable (examples/serve_lm.py) and mesh-compatible: all
-state updates are pure jax ops on pytrees that can carry shardings.
+All jax-touching machinery (compiled prefill/decode, the bucket ladder,
+cache splicing, mesh shardings) lives in
+:class:`repro.serve.executor.StepExecutor`, shared with the continuous
+scheduler; this module owns only queueing, sampling and observability.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import ModelConfig
-from repro.models.transformer import (
-    _split_kind,
-    decode_step,
-    init_decode_cache,
-    prefill,
-)
 from repro.obs import resolve as _obs_resolve
+from repro.serve.executor import DEFAULT_BUCKETS, StepExecutor
 from repro.serve.sampler import sample_token
 
 
@@ -44,6 +48,7 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     eos_token: Optional[int] = None
+    priority: int = 0                   # higher admits first (Scheduler only)
 
 
 @dataclasses.dataclass
@@ -53,12 +58,18 @@ class RequestState:
     generated: List[int] = dataclasses.field(default_factory=list)
     position: int = 0                   # next position to decode
     done: bool = False
+    finish_reason: Optional[str] = None  # "eos"|"max_new_tokens"|"cache_full"
     t_enqueue: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
+    admissions: int = 0                 # times admitted (> 1 after eviction)
 
 
-def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Legacy module-level bucket lookup (kept for its regression tests);
+    engines resolve buckets through ``StepExecutor.bucket_for``, which
+    additionally clips the ladder to ``max_len``."""
     for b in buckets:
         if n <= b:
             return b
@@ -71,93 +82,49 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
 class ServingEngine:
     def __init__(
         self,
-        cfg: ModelConfig,
+        cfg: Any,
         params: Any,
         num_slots: int = 4,
         max_len: int = 1024,
         rng_seed: int = 0,
         mesh: Any = None,
         obs: Any = None,
+        buckets: Optional[Sequence[int]] = None,
     ):
         # Observability is strictly opt-in: obs=None resolves to the shared
         # no-op sink (one attribute read + pass-through per hook), so the
         # decode loop stays bit-identical with instrumentation disabled
         # (tests/test_serve_obs.py pins this).
         self.obs = _obs_resolve(obs)
-        if not cfg.causal:
-            raise ValueError("encoder-only models cannot be served "
-                             "autoregressively")
-        # Resolve the feature-estimator entry up front: a bad estimator name
-        # should fail at engine construction with the registry's name list,
-        # not deep inside the first jitted prefill. RM/sketch lane state is
-        # O(1) either way (plan.output_dim fixes the state shapes).
-        self.estimator = None
-        self.fused_attention = False
-        if cfg.attention_mode == "rm":
-            from repro.common.dtypes import resolve_precision
-            from repro.core import registry
-            from repro.models.attention import rm_fuse_enabled
-
-            self.estimator = registry.get(cfg.rm.estimator).name
-            # Same fail-early rule for the feature-kernel precision policy:
-            # a typo'd cfg.rm.precision raises here with the valid names.
-            resolve_precision(cfg.rm.precision)
-            # ... and for the fusion mode: rm_fuse_enabled validates
-            # cfg.rm.fuse_featurize and resolves the estimator capability
-            # flag. When True, prefill emits outputs + decode state from ONE
-            # fused launch and each decode step runs ONE featurize launch
-            # for q and k together (docs/serving.md).
-            self.fused_attention = rm_fuse_enabled(cfg)
+        # The executor validates the config up front (causal, estimator
+        # registry name, precision policy, fusion mode) and owns the
+        # compiled prefill/decode calls, the bucket ladder (``buckets=``,
+        # validated sorted/positive and clipped to max_len) and the
+        # batched decode cache + mesh shardings.
+        self.executor = StepExecutor(cfg, params, num_slots, max_len,
+                                     buckets=buckets, mesh=mesh)
+        self.estimator = self.executor.estimator
+        self.fused_attention = self.executor.fused_attention
         self.cfg = cfg
-        self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
         self.mesh = mesh
-        self.cache = init_decode_cache(cfg, num_slots, max_len)
-        if mesh is not None:
-            # Data-parallel decode: the slot axis of the cache shards over
-            # the DP mesh axes and the params — the frozen ``rm_est``
-            # estimator subtree included — replicate per the name-rule table
-            # (DESIGN.md §10). Decode inputs are committed by jit against
-            # these placements every iteration; slot counts that don't
-            # divide the DP axes fall back to replicated via _dedupe_spec.
-            from jax.sharding import NamedSharding, PartitionSpec as P
-
-            from repro.distributed.sharding import (
-                cache_partition_specs,
-                params_partition_specs,
-            )
-
-            def _shardings(specs):
-                return jax.tree_util.tree_map(
-                    lambda sp: NamedSharding(mesh, sp), specs,
-                    is_leaf=lambda sp: isinstance(sp, P))
-
-            self.params = jax.device_put(
-                params, _shardings(params_partition_specs(params, mesh)))
-            self._cache_shardings = _shardings(
-                cache_partition_specs(self.cache, mesh))
-            self.cache = jax.device_put(self.cache, self._cache_shardings)
         self.slots: List[Optional[RequestState]] = [None] * num_slots
         self.queue: List[Request] = []
         self.finished: Dict[int, RequestState] = {}
         self._t_submit: Dict[int, float] = {}
         self._key = jax.random.PRNGKey(rng_seed)
-        self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
-        self._positions = jnp.zeros((num_slots,), jnp.int32)
+        self._tokens = np.zeros((num_slots, 1), np.int32)
+        self._positions = np.zeros((num_slots,), np.int32)
 
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
-        )
-        self._prefill_cache: Dict[int, Callable] = {}
-        # Prompt-length bucketing (DESIGN.md §2): attention-family mixers
-        # tolerate right-padded prompts at sentinel positions (< 0) — the
-        # causal mask plus rm-state masking keep real outputs exact, so
-        # prefill compiles are bounded per bucket instead of per distinct
-        # prompt length. SSM mixers carry recurrent state through every
-        # position and would need per-step freezing; they keep exact lengths.
-        mixers = {_split_kind(kind)[0] for kind in cfg.block_pattern}
-        self._bucketed = mixers <= {"attn", "mla"}
+    # Back-compat views onto executor-owned state (dist tests poke these).
+    @property
+    def params(self):
+        return self.executor.params
+
+    @property
+    def cache(self):
+        return self.executor.cache
 
     # -- public API -----------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -203,51 +170,31 @@ class ServingEngine:
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def _prefill_fn(self, length: int):
-        if length not in self._prefill_cache:
-            cfg = self.cfg
-
-            def fn(params, tokens, positions):
-                batch = {"tokens": tokens, "positions": positions}
-                return prefill(params, cfg, batch, self.max_len)
-
-            self._prefill_cache[length] = jax.jit(fn)
-        return self._prefill_cache[length]
-
     def _admit(self) -> None:
         free = self._free_slots()
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.pop(0)
             t = len(req.prompt)
-            # right-pad to the bucketed length: one compile per bucket, not
-            # per distinct prompt length. Padding tokens sit at sentinel
-            # position -1 so no real query attends to them and no state
-            # accumulates them.
-            tb = min(_bucket(t), self.max_len) if self._bucketed else t
+            tb = self.executor.bucket_for(t)
             self.obs.event("request/admit", request_id=req.request_id,
                            slot=slot, bucket=tb)
             with self.obs.span("prefill", request_id=req.request_id,
                                bucket=tb, prompt_len=t):
-                tokens = np.zeros((1, tb), np.int32)
-                tokens[0, :t] = np.asarray(req.prompt, np.int32)
-                positions = np.full((1, tb), -1, np.int32)
-                positions[0, :t] = np.arange(t, dtype=np.int32)
-                logits, cache1 = self._prefill_fn(tb)(
-                    self.params, jnp.asarray(tokens), jnp.asarray(positions)
-                )
-                self._splice_cache(slot, cache1)
+                logits, cache1, _ = self.executor.prefill(req.prompt)
+                self.executor.splice(slot, cache1)
             t_enqueue = self._t_submit.pop(req.request_id, None)
             if t_enqueue is None:
                 t_enqueue = self.obs.now()
             state = RequestState(request=req, slot=slot, position=t,
-                                 t_enqueue=t_enqueue)
+                                 t_enqueue=t_enqueue, admissions=1)
             # first generated token from the LAST REAL prefill logit
             self._key, sub = jax.random.split(self._key)
             tok = sample_token(logits[:, t - 1], sub, req.temperature)
             tok_i = int(tok[0])
             state.generated.append(tok_i)
             state.t_first_token = self.obs.now()
+            state.t_tokens.append(state.t_first_token)
             self.obs.histogram("serve/ttft_s",
                                state.t_first_token - state.t_enqueue)
             self.obs.gauge("serve/queue_depth", len(self.queue))
@@ -266,45 +213,26 @@ class ServingEngine:
                     else "cache_full"))
                 free.insert(0, slot)
                 continue
-            self._tokens = self._tokens.at[slot, 0].set(tok[0])
-            self._positions = self._positions.at[slot].set(t)
+            self._tokens[slot, 0] = tok_i
+            self._positions[slot] = t
             self.slots[slot] = state
         self.obs.gauge("serve/slots_occupied",
                        sum(s is not None for s in self.slots))
         # park empty lanes on a scratch position
         for i, s in enumerate(self.slots):
             if s is None:
-                self._positions = self._positions.at[i].set(self.max_len - 1)
-
-    def _splice_cache(self, slot: int, cache1: Any) -> None:
-        """Write a request's (batch=1) cache into lane ``slot``."""
-
-        # structural walk (dict trees with matching structure)
-        def _walk(big, small, path):
-            if isinstance(big, dict):
-                return {k: _walk(big[k], small[k], path + (k,))
-                        for k in big}
-            axis = 1 if "groups" in path else 0
-            return jax.lax.dynamic_update_index_in_dim(
-                big, jnp.take(small, 0, axis=axis).astype(big.dtype), slot,
-                axis=axis,
-            )
-
-        self.cache = _walk(self.cache, cache1, ())
-        if self.mesh is not None:
-            # keep the DP layout sticky: the host-level splice above loses
-            # the slot-axis sharding of the updated leaves
-            self.cache = jax.device_put(self.cache, self._cache_shardings)
+                self._positions[i] = self.executor.scratch_position
 
     def _decode_iteration(self) -> None:
+        import jax.numpy as jnp
+
         active = [s for s in self.slots if s is not None]
         if not active:
             return
         t_step = self.obs.now()
         with self.obs.span("decode/step", active=len(active)):
-            logits, self.cache = self._decode(
-                self.params, self.cache, self._tokens, self._positions
-            )
+            logits = self.executor.decode(jnp.asarray(self._tokens),
+                                          jnp.asarray(self._positions))
             self._key, sub = jax.random.split(self._key)
             # per-slot temperature: scale each lane's logits by its
             # request's temperature, then ONE batched categorical; greedy
@@ -324,9 +252,10 @@ class ServingEngine:
                 req = state.request
                 tok = int(sampled[i] if req.temperature > 0 else greedy[i])
                 state.generated.append(tok)
+                state.t_tokens.append(self.obs.now())
                 state.position += 1
-                self._tokens = self._tokens.at[i, 0].set(tok)
-                self._positions = self._positions.at[i].set(state.position)
+                self._tokens[i, 0] = tok
+                self._positions[i] = state.position
                 hit_eos = req.eos_token is not None and tok == req.eos_token
                 if (len(state.generated) >= req.max_new_tokens or hit_eos
                         or state.position >= self.max_len - 1):
@@ -353,10 +282,11 @@ class ServingEngine:
         stopped request whose final token coincides with EOS, or a cache
         exhaustion, are labeled truthfully."""
         req = state.request
+        state.finish_reason = reason
         self.finished[req.request_id] = state
         n_tok = len(state.generated)
         self.obs.event("request/finish", request_id=req.request_id,
-                       tokens=n_tok, reason=reason)
+                       slot=state.slot, tokens=n_tok, reason=reason)
         wall = state.t_done - state.t_enqueue
         if wall > 0:
             self.obs.histogram("serve/tokens_per_s", n_tok / wall)

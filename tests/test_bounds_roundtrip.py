@@ -1,0 +1,146 @@
+"""core.bounds inversion round-trips (ISSUE 9 satellite).
+
+Two inverse pairs, both measures, several kernels:
+
+  * Theorem 12 covering bound: ``required_d(eps, delta) = D`` implies
+    ``eps_at(D, delta) <= eps`` — buying the demanded budget always buys
+    back a guarantee at least as tight as requested;
+  * fixed-pair union bound: ``required_features_for_pairs`` vs
+    ``pairwise_eps``, exactly invertible in closed form.
+
+Plus the anti-drift pin: ``obs.drift.hoeffding_eps`` must equal
+``core.bounds.pairwise_eps`` BIT-EXACTLY — the DriftMonitor's live
+envelope and the offline acceptance suite share one formula now
+(previously duplicated arithmetic; this test keeps it that way).
+
+Deterministic sweep always runs; the hypothesis driver (derandomized ci
+profile) widens the same parameter space in CI.
+"""
+import math
+
+import pytest
+
+from repro.core import (
+    ExponentialDotProductKernel,
+    HomogeneousPolynomialKernel,
+    PolynomialKernel,
+)
+from repro.core.bounds import (
+    constants_for,
+    pairwise_eps,
+    required_features_for_pairs,
+)
+from repro.obs.drift import hoeffding_eps
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+KERNELS = {
+    "exp": ExponentialDotProductKernel(1.0),
+    "poly": PolynomialKernel(degree=3, r=1.0),
+    "homog": HomogeneousPolynomialKernel(degree=2),
+}
+MEASURES = ("geometric", "proportional")
+
+
+def check_covering_roundtrip(kernel, radius, dim, eps, delta, measure):
+    consts = constants_for(kernel, radius, dim)
+    d_req = consts.required_d(eps, delta, measure)
+    assert d_req >= 1
+    eps_back = consts.eps_at(d_req, delta, measure)
+    assert 0.0 < eps_back <= eps * (1.0 + 1e-9), (
+        f"round-trip loosened the guarantee: required_d({eps})={d_req} "
+        f"but eps_at({d_req})={eps_back}")
+    # and the inverse is honest: materially fewer features can't still
+    # certify eps (ceil slack aside)
+    if d_req > 8:
+        assert consts.eps_at(d_req // 2, delta, measure) > eps
+
+
+def check_pairwise_roundtrip(kernel, radius, dim, eps, n_pairs, delta,
+                             measure):
+    d_req = required_features_for_pairs(kernel, radius, dim, eps, n_pairs,
+                                        delta, measure=measure)
+    assert d_req >= 1
+    back = pairwise_eps(kernel, radius, dim, d_req, n_pairs, delta,
+                        measure=measure)
+    assert back <= eps * (1.0 + 1e-12)
+    # exact closed-form inverse: one feature fewer breaks the guarantee
+    if d_req > 1:
+        assert pairwise_eps(kernel, radius, dim, d_req - 1, n_pairs,
+                            delta, measure=measure) > eps * (1.0 - 1e-12)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+@pytest.mark.parametrize("kname", sorted(KERNELS))
+@pytest.mark.parametrize("eps,delta", [(0.1, 0.05), (0.05, 0.01),
+                                       (0.3, 0.2)])
+def test_sweep_covering_roundtrip(kname, measure, eps, delta):
+    check_covering_roundtrip(KERNELS[kname], 0.5, 8, eps, delta, measure)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+@pytest.mark.parametrize("kname", sorted(KERNELS))
+@pytest.mark.parametrize("eps,n_pairs", [(0.1, 136), (0.02, 10),
+                                         (0.5, 1000)])
+def test_sweep_pairwise_roundtrip(kname, measure, eps, n_pairs):
+    check_pairwise_roundtrip(KERNELS[kname], 0.5, 8, eps, n_pairs, 0.05,
+                             measure)
+
+
+def test_eps_at_monotone_in_budget():
+    consts = constants_for(KERNELS["exp"], 0.5, 8)
+    eps = [consts.eps_at(d, 0.05) for d in (64, 256, 1024, 4096)]
+    assert eps == sorted(eps, reverse=True)
+    assert all(e > 0 for e in eps)
+
+
+def test_eps_at_rejects_nonpositive_budget():
+    consts = constants_for(KERNELS["exp"], 0.5, 8)
+    with pytest.raises(ValueError, match="num_features"):
+        consts.eps_at(0, 0.05)
+
+
+def test_drift_monitor_delegates_to_core_bounds():
+    """The anti-drift pin: obs.drift.hoeffding_eps IS
+    core.bounds.pairwise_eps — bit-equal for both measures, so the online
+    monitor and the offline bound suite cannot diverge again."""
+    k = KERNELS["exp"]
+    for measure in MEASURES:
+        for d in (128, 1024):
+            a = hoeffding_eps(k, 0.9, 16, d, 136, 0.05, measure=measure)
+            b = pairwise_eps(k, 0.9, 16, d, 136, 0.05, measure=measure)
+            assert a == b
+    # and the formula is the documented one
+    c = constants_for(k, 0.9, 16).c_proportional
+    want = math.sqrt(8.0 * c * c * math.log(2.0 * 136 / 0.05) / 1024)
+    assert hoeffding_eps(k, 0.9, 16, 1024, 136, 0.05) == pytest.approx(
+        want, rel=1e-12)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(eps=st.floats(0.01, 0.9), delta=st.floats(1e-4, 0.5),
+           radius=st.floats(0.1, 0.7), dim=st.integers(2, 64),
+           kname=st.sampled_from(sorted(KERNELS)),
+           measure=st.sampled_from(MEASURES))
+    def test_hyp_covering_roundtrip(eps, delta, radius, dim, kname,
+                                    measure):
+        check_covering_roundtrip(KERNELS[kname], radius, dim, eps, delta,
+                                 measure)
+
+    @settings(max_examples=40, deadline=None)
+    @given(eps=st.floats(0.01, 0.9), delta=st.floats(1e-4, 0.5),
+           n_pairs=st.integers(1, 10_000), dim=st.integers(2, 64),
+           kname=st.sampled_from(sorted(KERNELS)),
+           measure=st.sampled_from(MEASURES))
+    def test_hyp_pairwise_roundtrip(eps, delta, n_pairs, dim, kname,
+                                    measure):
+        check_pairwise_roundtrip(KERNELS[kname], 0.5, dim, eps, n_pairs,
+                                 delta, measure)

@@ -1,0 +1,198 @@
+"""Loadgen + BENCH_serving.json: deterministic under FakeClock, honest SLO
+accounting, schema-v1 gate wired through ``python -m repro.bench --check``.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bench import loadgen, schema
+from repro.bench.__main__ import main as bench_main
+from repro.configs import get_config
+from repro.models import init_model
+from repro.obs import Obs, clock
+from repro.serve import Scheduler
+
+PROV = {"backend": "test", "device_kind": "test", "device_count": 1,
+        "interpret": False, "jax_version": "0"}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    return cfg, init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _run(cfg, params, *, rate=2.0, n=6, slots=2, seed=0):
+    clk = clock.FakeClock(step=0.01)
+    obs = Obs(clock=clk, provenance=PROV)
+    sched = Scheduler(cfg, params, num_slots=slots, max_len=32,
+                      rng_seed=seed, obs=obs)
+    arrivals = loadgen.poisson_trace(rate, n, seed=seed,
+                                     max_new_range=(2, 5))
+    raw = loadgen.run_load(sched, arrivals, clock=clk, prompt_seed=seed)
+    obs.close()
+    return arrivals, raw
+
+
+# -- arrivals -----------------------------------------------------------------
+def test_poisson_trace_is_seeded_and_ordered():
+    a = loadgen.poisson_trace(1.5, 20, seed=3)
+    b = loadgen.poisson_trace(1.5, 20, seed=3)
+    assert a == b
+    assert all(y.t >= x.t for x, y in zip(a, a[1:]))
+    assert [x.request_id for x in a] == list(range(20))
+    assert loadgen.poisson_trace(1.5, 20, seed=4) != a
+    with pytest.raises(ValueError, match="rate"):
+        loadgen.poisson_trace(0.0, 5)
+
+
+def test_trace_file_roundtrip(tmp_path):
+    a = loadgen.poisson_trace(1.0, 8, seed=1,
+                              temperature_choices=(0.0, 0.7),
+                              priority_choices=(0, 1))
+    p = tmp_path / "trace.jsonl"
+    loadgen.save_trace(p, a)
+    assert loadgen.load_trace(p) == a
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"t": 1.0, "request_id": 0, "prompt_len": 4})
+                   + "\n" +
+                   json.dumps({"t": 0.5, "request_id": 1, "prompt_len": 4})
+                   + "\n")
+    with pytest.raises(ValueError, match="non-decreasing"):
+        loadgen.load_trace(bad)
+    dup = tmp_path / "dup.jsonl"
+    dup.write_text(json.dumps({"t": 1.0, "request_id": 0, "prompt_len": 4})
+                   + "\n" +
+                   json.dumps({"t": 2.0, "request_id": 0, "prompt_len": 4})
+                   + "\n")
+    with pytest.raises(ValueError, match="duplicate"):
+        loadgen.load_trace(dup)
+
+
+# -- the harness --------------------------------------------------------------
+def test_run_load_is_deterministic_under_fake_clock(setup):
+    cfg, params = setup
+    _, raw1 = _run(cfg, params)
+    _, raw2 = _run(cfg, params)
+    assert loadgen.slo_summary(raw1) == loadgen.slo_summary(raw2)
+    tok1 = {i: s.generated for i, s in raw1["finished"].items()}
+    tok2 = {i: s.generated for i, s in raw2["finished"].items()}
+    assert tok1 == tok2
+
+
+def test_run_load_finishes_everything_and_accounts_slo(setup):
+    cfg, params = setup
+    arrivals, raw = _run(cfg, params)
+    assert raw["submitted"] == len(arrivals)
+    assert raw["truncated"] == 0
+    slo = loadgen.slo_summary(raw)
+    assert slo["requests_finished"] == len(arrivals)
+    assert slo["ttft_s"]["n"] == len(arrivals)
+    assert slo["ttft_s"]["p50"] > 0
+    assert slo["ttft_s"]["p99"] >= slo["ttft_s"]["p50"]
+    assert slo["total_tokens"] == sum(
+        len(s.generated) for s in raw["finished"].values())
+    # inter-token gaps pool every request's consecutive token pairs
+    want_n = sum(max(0, len(s.t_tokens) - 1)
+                 for s in raw["finished"].values())
+    assert slo["inter_token_s"]["n"] == want_n
+    # saturation accounting only counts all-slots-busy steps
+    sat = [st for st in raw["steps"] if st.active == raw["num_slots"]]
+    assert slo["saturated_steps"] == len(sat)
+    if sat:
+        assert slo["tokens_per_s_saturated"] == pytest.approx(
+            sum(st.new_tokens for st in sat)
+            / sum(st.t_end - st.t_start for st in sat))
+
+
+def test_open_loop_respects_arrival_times(setup):
+    """Requests must not be submitted before their scheduled arrival: the
+    harness is open-loop, idle-advancing the fake clock to the next
+    arrival rather than draining the trace up front."""
+    cfg, params = setup
+    clk = clock.FakeClock(step=0.01)
+    obs = Obs(clock=clk, provenance=PROV)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32, obs=obs)
+    arrivals = loadgen.poisson_trace(0.05, 3, seed=0)   # sparse: idle gaps
+    raw = loadgen.run_load(sched, arrivals, clock=clk)
+    obs.close()
+    submit_t = {e["attrs"]["request_id"]: e["ts_us"] / 1e6
+                for e in obs.tracer.events("request/submit")}
+    for a in arrivals:
+        assert submit_t[a.request_id] >= a.t - 1e-9
+    assert raw["truncated"] == 0
+
+
+# -- the artifact + gate ------------------------------------------------------
+def test_serving_payload_schema_roundtrip(setup, tmp_path):
+    cfg, params = setup
+    _, raw = _run(cfg, params)
+    payload = loadgen.serving_payload(
+        loadgen.slo_summary(raw),
+        workload={"arch": "qwen3-1.7b", "scheduler": "continuous",
+                  "num_slots": 2, "max_len": 32, "rate": 2.0,
+                  "num_requests": 6, "seed": 0},
+        provenance=PROV)
+    assert schema.check_serving_payload(payload) == []
+
+    # --check dispatches on kind and passes
+    p = tmp_path / "BENCH_serving.json"
+    p.write_text(json.dumps(payload))
+    assert schema.check_file(p) == []
+    assert bench_main(["--check", str(p)]) == 0
+
+    # a silently dropped SLO cell fails the gate
+    broken = json.loads(p.read_text())
+    del broken["slo"]["tokens_per_s_saturated"]
+    del broken["slo"]["ttft_s"]["p99"]
+    pb = tmp_path / "broken.json"
+    pb.write_text(json.dumps(broken))
+    errors = schema.check_file(pb)
+    assert any("tokens_per_s_saturated" in e for e in errors)
+    assert any("p99" in e for e in errors)
+    assert bench_main(["--check", str(pb)]) == 1
+
+
+def test_serving_schema_rejects_empty_and_mislabeled_runs():
+    empty = {"kind": "serving",
+             "schema_version": loadgen.SERVING_SCHEMA_VERSION,
+             "provenance": PROV,
+             "workload": {"arch": "a", "scheduler": "continuous",
+                          "num_slots": 1, "max_len": 8,
+                          "num_requests": 0, "seed": 0},
+             "slo": {k: 0 for k in schema.SERVING_REQUIRED_SLO_KEYS}}
+    empty["slo"]["ttft_s"] = {"p50": 0, "p99": 0, "mean": 0, "n": 0}
+    empty["slo"]["inter_token_s"] = {"p50": 0, "p99": 0, "mean": 0, "n": 0}
+    empty["slo"]["requests_finished"] = 0
+    errors = schema.check_serving_payload(empty)
+    assert any("requests_finished == 0" in e for e in errors)
+
+    wrong = dict(empty, schema_version=99)
+    assert any("schema_version" in e
+               for e in schema.check_serving_payload(wrong))
+
+
+def test_loadgen_cli_writes_gated_artifact(tmp_path):
+    out = tmp_path / "BENCH_serving.json"
+    trace = tmp_path / "arrivals.jsonl"
+    rc = loadgen.main(["--quick", "--fake-clock", "--rate", "2.0",
+                       "--requests", "6", "--slots", "2",
+                       "--max-len", "32", "--save-trace", str(trace),
+                       "--out", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert schema.check_serving_payload(payload) == []
+    assert payload["workload"]["fake_clock"] is True
+    # the saved trace replays to the identical artifact
+    out2 = tmp_path / "replay.json"
+    rc = loadgen.main(["--quick", "--fake-clock", "--trace", str(trace),
+                       "--slots", "2", "--max-len", "32",
+                       "--out", str(out2)])
+    assert rc == 0
+    replay = json.loads(out2.read_text())
+    assert replay["slo"] == payload["slo"]

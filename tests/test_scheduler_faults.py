@@ -1,0 +1,209 @@
+"""Fault injection for the continuous scheduler: kill a decode/prefill
+step mid-run, assert the recovery contract (docs/serving.md).
+
+The contract — the serving analogue of ``train.fault.run_with_restarts``'s
+bounded crash-restart loop: with ``max_restarts=N``, up to N failed steps
+re-queue every in-flight request at its ORIGINAL queue position, reset the
+decode cache, and continue; the N+1-th failure propagates. Because token
+streams are keyed per (request, token index), replayed requests regenerate
+bit-identical outputs — a crash is invisible in the results, visible only
+in the trace (``request/evict`` reason="restart", ``serve/restart``) and
+the ``serve/restarts`` counter. ``StragglerMonitor`` (reused from the
+training stack) watches decode wall times across the respawn.
+"""
+import dataclasses
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.obs import Obs, clock
+from repro.serve import Request, Scheduler
+from repro.train.fault import StragglerMonitor
+
+sys.path.insert(0, "tools")
+from check_trace import check_request_lifecycles  # noqa: E402
+
+PROV = {"backend": "test", "device_kind": "test", "device_count": 1,
+        "interpret": False, "jax_version": "0"}
+MAX_LEN = 32
+VOCAB = 512
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    return cfg, init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _submit_workload(sched, n=3, max_new=4, temperature=0.5):
+    rng = np.random.default_rng(7)
+    for i in range(n):
+        sched.submit(Request(request_id=i,
+                             prompt=rng.integers(0, VOCAB, size=5),
+                             max_new_tokens=max_new,
+                             temperature=temperature))
+
+
+def _reference(cfg, params, n=3, max_new=4, temperature=0.5, rng_seed=0):
+    out = {}
+    for i in range(n):
+        s = Scheduler(cfg, params, num_slots=1, max_len=MAX_LEN,
+                      rng_seed=rng_seed)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, VOCAB, size=5) for _ in range(n)]
+        s.submit(Request(request_id=i, prompt=prompts[i],
+                         max_new_tokens=max_new, temperature=temperature))
+        out[i] = s.run()[i].generated
+    return out
+
+
+def _inject_decode_failures(sched, fail_on_calls, monkeypatch):
+    """Make executor.decode raise on the given 1-based call numbers."""
+    orig = sched.executor.decode
+    calls = {"n": 0}
+
+    def flaky(tokens, positions):
+        calls["n"] += 1
+        if calls["n"] in fail_on_calls:
+            raise RuntimeError(f"injected decode failure "
+                               f"(call {calls['n']})")
+        return orig(tokens, positions)
+
+    monkeypatch.setattr(sched.executor, "decode", flaky)
+    return calls
+
+
+def test_decode_crash_requeues_and_finishes_bit_identically(
+        setup, monkeypatch):
+    """Kill one decode step mid-run: every in-flight slot is re-queued,
+    the run completes, and outputs match an undisturbed sequential run."""
+    cfg, params = setup
+    obs = Obs(clock=clock.FakeClock(), provenance=PROV)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=MAX_LEN,
+                      rng_seed=0, max_restarts=2, obs=obs)
+    _submit_workload(sched)
+    _inject_decode_failures(sched, {2}, monkeypatch)
+    done = sched.run()
+    obs.close()
+
+    assert sorted(done) == [0, 1, 2]
+    assert sched.restarts == 1
+    assert {i: s.generated for i, s in done.items()} == \
+        _reference(cfg, params)
+    # the trace records the respawn: every slot in flight at the crash was
+    # evicted with reason="restart", then re-admitted; lifecycles stay
+    # well-formed through it
+    restarts = obs.tracer.events("serve/restart")
+    assert len(restarts) == 1
+    assert "injected decode failure" in restarts[0]["attrs"]["cause"]
+    evs = obs.tracer.events("request/evict")
+    assert evs and all(e["attrs"]["reason"] == "restart" for e in evs)
+    assert {e["attrs"]["request_id"] for e in evs} == \
+        set(restarts[0]["attrs"]["requeued"])
+    assert check_request_lifecycles(obs.tracer.records) == []
+    # re-admitted requests carry their attempt count
+    assert any(done[i].admissions >= 2 for i in done)
+    snap = obs.metrics.snapshot(provenance=PROV)
+    assert snap["counters"]["serve/restarts"] == 1.0
+
+
+def test_repeated_crashes_within_budget_still_complete(setup, monkeypatch):
+    cfg, params = setup
+    sched = Scheduler(cfg, params, num_slots=2, max_len=MAX_LEN,
+                      rng_seed=0, max_restarts=3)
+    _submit_workload(sched)
+    _inject_decode_failures(sched, {2, 4, 7}, monkeypatch)
+    done = sched.run()
+    assert sched.restarts == 3
+    assert {i: s.generated for i, s in done.items()} == \
+        _reference(cfg, params)
+
+
+def test_crash_beyond_budget_propagates(setup, monkeypatch):
+    """The N+1-th failure re-raises — bounded restarts, like
+    run_with_restarts, never an infinite crash loop."""
+    cfg, params = setup
+    sched = Scheduler(cfg, params, num_slots=2, max_len=MAX_LEN,
+                      rng_seed=0, max_restarts=1)
+    _submit_workload(sched)
+    _inject_decode_failures(sched, {1, 2}, monkeypatch)
+    with pytest.raises(RuntimeError, match="injected decode failure"):
+        sched.run()
+    assert sched.restarts == 1
+    # nothing was lost: the in-flight work is back in the queue
+    assert sched.pending()
+
+
+def test_default_zero_restarts_fails_fast(setup, monkeypatch):
+    """max_restarts defaults to 0: recovery is opt-in, so the invariant
+    suite (and any caller not expecting at-least-once semantics) sees
+    executor failures immediately."""
+    cfg, params = setup
+    sched = Scheduler(cfg, params, num_slots=1, max_len=MAX_LEN)
+    _submit_workload(sched, n=1)
+    _inject_decode_failures(sched, {1}, monkeypatch)
+    with pytest.raises(RuntimeError, match="injected decode failure"):
+        sched.run()
+
+
+def test_prefill_crash_does_not_lose_the_popped_request(
+        setup, monkeypatch):
+    """A prefill failure strikes BETWEEN queue pop and slot assignment —
+    the request must be re-queued at its original position, not dropped."""
+    cfg, params = setup
+    sched = Scheduler(cfg, params, num_slots=1, max_len=MAX_LEN,
+                      rng_seed=0, max_restarts=1)
+    _submit_workload(sched, n=2)
+    orig = sched.executor.prefill
+    calls = {"n": 0}
+
+    def flaky(prompt):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected prefill failure")
+        return orig(prompt)
+
+    monkeypatch.setattr(sched.executor, "prefill", flaky)
+    done = sched.run()
+    assert sorted(done) == [0, 1]
+    assert sched.restarts == 1
+    assert {i: s.generated for i, s in done.items()} == \
+        _reference(cfg, params, n=2)
+
+
+def test_straggler_monitor_watches_decode_steps(setup):
+    """The training stack's StragglerMonitor plugs into serving: decode
+    wall times feed its EWMA, and a deliberately slowed step is flagged."""
+    cfg, params = setup
+    fake = clock.FakeClock(step=0.001)
+    obs = Obs(clock=fake, provenance=PROV)
+    monitor = StragglerMonitor(threshold=2.0, warmup_steps=2)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=MAX_LEN,
+                      rng_seed=0, straggler_monitor=monitor, obs=obs)
+    _submit_workload(sched, n=2, max_new=8)
+    for _ in range(6):
+        if sched.pending():
+            sched.step()
+    assert monitor.mean is not None and monitor._seen >= 4
+    baseline_events = len(monitor.events)
+    # one decode step suddenly takes ~1000x the EWMA wall time
+    fake.advance(0.0)  # no-op, keep the clock object in scope
+    orig = sched.executor.decode
+
+    def slow(tokens, positions):
+        fake.advance(10.0)
+        return orig(tokens, positions)
+
+    sched.executor.decode = slow
+    if sched.pending():
+        sched.step()
+    sched.executor.decode = orig
+    sched.run()
+    obs.close()
+    assert len(monitor.events) > baseline_events, (
+        "slowed decode step was not flagged as a straggler")

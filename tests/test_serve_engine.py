@@ -309,3 +309,49 @@ def test_bucketed_prefill_rm_state_matches_unpadded():
         np.testing.assert_allclose(np.asarray(flat_p[path]),
                                    np.asarray(leaf), rtol=1e-5, atol=1e-6,
                                    err_msg=str(path))
+
+
+def test_engine_accepts_custom_bucket_ladder(setup):
+    """Satellite regression (ISSUE 9): ``buckets=`` threads through
+    ``ServingEngine.__init__`` to the executor, replacing the old
+    hardcoded module tuple, and the effective ladder is clipped to
+    ``max_len`` so no compiled prefill shape is unreachable."""
+    cfg, params = setup
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=24,
+                           buckets=(8, 16, 64))
+    # 64 >= max_len is clipped; max_len itself caps the ladder
+    assert engine.executor.buckets == (8, 16, 24)
+    assert engine.executor.bucket_for(5) == 8
+    assert engine.executor.bucket_for(9) == 16
+    assert engine.executor.bucket_for(17) == 24
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        engine.executor.bucket_for(25)
+    # custom ladder serves identically to the default one
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, size=6)
+    engine.submit(Request(request_id=0, prompt=prompt, max_new_tokens=4))
+    default_engine = ServingEngine(cfg, params, num_slots=1, max_len=24)
+    default_engine.submit(Request(request_id=0, prompt=prompt,
+                                  max_new_tokens=4))
+    assert engine.run()[0].generated == default_engine.run()[0].generated
+
+
+def test_bucket_ladder_validation(setup):
+    """Unsorted, non-positive or empty ladders fail at construction with
+    the offending ladder named — not deep inside the first prefill."""
+    cfg, params = setup
+    for bad in [(), (0, 32), (-4, 8), (32, 16), (16, 16)]:
+        with pytest.raises(ValueError, match="buckets"):
+            ServingEngine(cfg, params, num_slots=1, max_len=64, buckets=bad)
+
+
+def test_default_ladder_clipped_to_max_len(setup):
+    """The old hardcoded ladder compiled prefill fns for buckets beyond
+    max_len; now the effective ladder ends exactly at max_len."""
+    from repro.serve import DEFAULT_BUCKETS, effective_buckets
+
+    cfg, params = setup
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=64)
+    assert engine.executor.buckets == (32, 64)
+    assert engine.executor.buckets == effective_buckets(DEFAULT_BUCKETS, 64)
+    assert max(engine.executor.buckets) == 64

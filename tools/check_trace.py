@@ -16,8 +16,18 @@ Checks (the CI ``obs-smoke`` job gates on these):
 * the required lifecycle names are present. Defaults cover a serve run:
   ``request/submit -> request/admit -> prefill -> decode/step ->
   request/finish``;
+* per-request lifecycles are WELL-FORMED (``check_request_lifecycles``):
+  one submit before anything else, admits and evicts alternate, at most
+  one finish and it is terminal, and no two in-flight requests ever hold
+  the same slot (the scheduler's no-double-assignment invariant, replayed
+  from the event stream — events are recorded in call order, so the
+  interleaving is faithful even though spans close out of order);
 * the trace converts to a Chrome ``traceEvents`` dict (what Perfetto
   loads) without error.
+
+``check_records`` / ``check_request_lifecycles`` are importable for
+in-process use — the obs concurrency tests validate live ``Tracer.records``
+without touching disk.
 
 Exit code 0 = valid, 1 = failures (each printed on its own line).
 """
@@ -32,6 +42,127 @@ from pathlib import Path
 REQUIRED_EVENTS = ("request/submit", "request/admit", "request/finish")
 REQUIRED_SPANS = ("prefill", "decode/step")
 PROVENANCE_KEYS = ("backend", "device_kind", "interpret", "jax_version")
+
+
+def check_request_lifecycles(records):
+    """Lifecycle errors over the ``request/*`` EVENT stream (empty = valid).
+
+    Replays the per-request state machine
+    ``submit -> (admit -> evict)* -> admit -> finish`` and the global
+    slot-occupancy map: an ``admit`` into a slot another request currently
+    holds, an ``evict``/``finish`` without a live admission, a second
+    ``submit``, or activity after ``finish`` are all violations. Requests
+    still queued or in-flight at the end of the trace are fine (truncated
+    runs are legal) — only ORDER is policed here.
+    """
+    errors = []
+    phase = {}          # rid -> "queued" | "running" | "done"
+    slot_of = {}        # rid -> slot currently held
+    occupant = {}       # slot -> rid
+    for i, rec in enumerate(records):
+        if rec.get("type") != "event":
+            continue
+        name = rec.get("name", "")
+        if not name.startswith("request/"):
+            continue
+        attrs = rec.get("attrs") or {}
+        rid = attrs.get("request_id")
+        if rid is None:
+            errors.append(f"record {i + 1} ({name}): no request_id attr")
+            continue
+        where = f"record {i + 1} (request {rid})"
+        if name == "request/submit":
+            if rid in phase:
+                errors.append(f"{where}: duplicate submit "
+                              f"(phase was {phase[rid]!r})")
+            phase[rid] = "queued"
+        elif name == "request/admit":
+            if phase.get(rid) != "queued":
+                errors.append(f"{where}: admit while "
+                              f"{phase.get(rid, 'never submitted')!r}")
+            slot = attrs.get("slot")
+            if slot is None:
+                errors.append(f"{where}: admit has no slot attr")
+            else:
+                holder = occupant.get(slot)
+                if holder is not None and holder != rid:
+                    errors.append(
+                        f"{where}: admitted into slot {slot} already "
+                        f"held by request {holder} (double-assignment)")
+                occupant[slot] = rid
+                slot_of[rid] = slot
+            phase[rid] = "running"
+        elif name == "request/evict":
+            if phase.get(rid) != "running":
+                errors.append(f"{where}: evict while "
+                              f"{phase.get(rid, 'never submitted')!r}")
+            else:
+                occupant.pop(slot_of.pop(rid, None), None)
+                phase[rid] = "queued"
+        elif name == "request/finish":
+            if phase.get(rid) != "running":
+                errors.append(f"{where}: finish while "
+                              f"{phase.get(rid, 'never submitted')!r}")
+            else:
+                occupant.pop(slot_of.pop(rid, None), None)
+                phase[rid] = "done"
+    return errors
+
+
+def check_records(records, require_events=REQUIRED_EVENTS,
+                  require_spans=REQUIRED_SPANS, lifecycles=True):
+    """Validate an in-memory record list (e.g. a live ``Tracer.records``).
+
+    The record-shape, required-name, lifecycle and Chrome-conversion
+    checks of :func:`check_trace`, minus the file/meta-header handling —
+    the in-process entry point for tests that interleave requests and
+    want the trace policed without a round-trip through disk.
+    """
+    errors = []
+    names = {"span": set(), "event": set()}
+    body = [r for r in records if r.get("type") != "meta"]
+    for i, rec in enumerate(body, start=1):
+        kind = rec.get("type")
+        if kind not in ("span", "event"):
+            errors.append(f"record {i}: unknown type {kind!r}")
+            continue
+        if not isinstance(rec.get("name"), str) or not rec["name"]:
+            errors.append(f"record {i}: missing name")
+            continue
+        ts = rec.get("ts_us")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            errors.append(f"record {i} ({rec['name']}): bad ts_us {ts!r}")
+        if not isinstance(rec.get("attrs", {}), dict):
+            errors.append(f"record {i} ({rec['name']}): attrs not a dict")
+        if kind == "span":
+            dur = rec.get("dur_us")
+            if not isinstance(dur, (int, float)) or not math.isfinite(dur) \
+                    or dur < 0:
+                errors.append(
+                    f"record {i} ({rec['name']}): bad dur_us {dur!r}")
+        names[kind].add(rec["name"])
+
+    for name in require_events:
+        if name not in names["event"]:
+            errors.append(f"required event {name!r} never recorded "
+                          f"(saw: {sorted(names['event'])})")
+    for name in require_spans:
+        if name not in names["span"]:
+            errors.append(f"required span {name!r} never recorded "
+                          f"(saw: {sorted(names['span'])})")
+
+    if lifecycles:
+        errors += check_request_lifecycles(body)
+
+    try:
+        from repro.obs import chrome_trace
+
+        chrome = chrome_trace(records)
+        if not chrome.get("traceEvents"):
+            errors.append("chrome conversion produced no traceEvents")
+    except Exception as e:  # noqa: BLE001 - report, don't crash the gate
+        errors.append(f"chrome conversion failed: {e}")
+    return errors
 
 
 def check_trace(path, require_events=REQUIRED_EVENTS,
@@ -71,50 +202,12 @@ def check_trace(path, require_events=REQUIRED_EVENTS,
             for key in PROVENANCE_KEYS:
                 if key not in prov:
                     errors.append(f"meta.provenance missing {key!r}")
-
-    names = {"span": set(), "event": set()}
     for i, rec in enumerate(records[1:], start=2):
-        kind = rec.get("type")
-        if kind not in ("span", "event", "meta"):
-            errors.append(f"record {i}: unknown type {kind!r}")
-            continue
-        if kind == "meta":
+        if rec.get("type") == "meta":
             errors.append(f"record {i}: duplicate meta header")
-            continue
-        if not isinstance(rec.get("name"), str) or not rec["name"]:
-            errors.append(f"record {i}: missing name")
-            continue
-        ts = rec.get("ts_us")
-        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
-            errors.append(f"record {i} ({rec['name']}): bad ts_us {ts!r}")
-        if not isinstance(rec.get("attrs", {}), dict):
-            errors.append(f"record {i} ({rec['name']}): attrs not a dict")
-        if kind == "span":
-            dur = rec.get("dur_us")
-            if not isinstance(dur, (int, float)) or not math.isfinite(dur) \
-                    or dur < 0:
-                errors.append(
-                    f"record {i} ({rec['name']}): bad dur_us {dur!r}")
-        names[kind].add(rec["name"])
-
-    for name in require_events:
-        if name not in names["event"]:
-            errors.append(f"required event {name!r} never recorded "
-                          f"(saw: {sorted(names['event'])})")
-    for name in require_spans:
-        if name not in names["span"]:
-            errors.append(f"required span {name!r} never recorded "
-                          f"(saw: {sorted(names['span'])})")
-
-    try:
-        from repro.obs import chrome_trace
-
-        chrome = chrome_trace(records)
-        if not chrome.get("traceEvents"):
-            errors.append("chrome conversion produced no traceEvents")
-    except Exception as e:  # noqa: BLE001 - report, don't crash the gate
-        errors.append(f"chrome conversion failed: {e}")
-    return errors
+    return errors + check_records(
+        [r for r in records[1:] if r.get("type") != "meta"],
+        require_events=require_events, require_spans=require_spans)
 
 
 def main(argv=None) -> int:
