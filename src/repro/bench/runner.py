@@ -343,7 +343,7 @@ def run_spec(
                     f"{cell['speedup']:.3f}")
     from repro.common.env import platform_provenance
 
-    return {
+    payload = {
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
         "provenance": platform_provenance(),
@@ -354,6 +354,18 @@ def run_spec(
         "results": results,
         "fused_attention": attn,
     }
+    # the adaptive-accuracy worked example: what select_budget decides for
+    # each benched shape, priced from THIS payload's own throughput rows
+    # (docs/adaptive.md; validated by schema.check_payload when present)
+    from repro.core.select import selection_section
+
+    payload["selection"] = selection_section(payload)
+    for shape_label, decs in payload["selection"]["decisions"].items():
+        for dec in decs:
+            say(f"bench/selection/{shape_label},eps={dec['eps']:g},"
+                f"{dec['estimator']}/{dec['precision']},"
+                f"D={dec['num_features']}")
+    return payload
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,17 @@ ATTN_REQUIRED_CELL_KEYS = (
 
 _REQUIRED_SHAPE_KEYS = ("kernel", "d", "F", "batch", "cells")
 
+# The optional ``selection`` section (repro.core.select.selection_section):
+# per benched shape, the (estimator, D, precision) decision table at a
+# small (eps, delta) target grid, priced from the payload's own rows.
+# Optional because thin CLI outputs predate it; when PRESENT it must be
+# complete — every results shape gets a decision list and every decision
+# carries the accuracy contract fields.
+_REQUIRED_SELECTION_KEYS = ("targets", "measure", "radius", "decisions")
+
+_REQUIRED_DECISION_KEYS = ("estimator", "precision", "num_features",
+                           "eps", "delta", "eps_certified")
+
 _REQUIRED_ATTN_SHAPE_KEYS = ("kernel", "d", "F", "heads", "T", "dv",
                              "batch", "chunk", "cells")
 
@@ -108,6 +119,31 @@ def check_payload(
                 for mk in REQUIRED_CELL_KEYS:
                     if mk not in cells[ck]:
                         errors.append(f"{label}/{ck}: missing metric {mk!r}")
+
+    selection = payload.get("selection")
+    if selection is not None:
+        for k in _REQUIRED_SELECTION_KEYS:
+            if k not in selection:
+                errors.append(f"selection: missing key {k!r}")
+        decisions = selection.get("decisions")
+        if isinstance(decisions, dict):
+            n_targets = len(selection.get("targets") or [])
+            for label in results:
+                decs = decisions.get(label)
+                if decs is None:
+                    errors.append(f"selection: no decisions for shape "
+                                  f"{label}")
+                    continue
+                if n_targets and len(decs) != n_targets:
+                    errors.append(
+                        f"selection/{label}: {len(decs)} decisions for "
+                        f"{n_targets} targets")
+                for i, dec in enumerate(decs):
+                    for mk in _REQUIRED_DECISION_KEYS:
+                        if mk not in dec:
+                            errors.append(
+                                f"selection/{label}[{i}]: missing "
+                                f"field {mk!r}")
 
     # v2: the fused_attention section (fused vs two-launch per estimator x
     # precision). Same coverage law as results: every registry family must

@@ -41,6 +41,13 @@ from repro.core.bounds import (
     required_num_features,
     uniform_failure_prob,
 )
+from repro.core.doubling import GrowableFeatureMap, make_growable_feature_map
+from repro.core.select import (
+    BudgetDecision,
+    CostModel,
+    relative_to_additive_eps,
+    select_budget,
+)
 from repro.core.linear_models import (
     Classifier,
     train_featurized_linear,
@@ -76,6 +83,12 @@ __all__ = [
     "RademacherInnerMap",
     "RFFInnerMap",
     "make_compositional_feature_map",
+    "GrowableFeatureMap",
+    "make_growable_feature_map",
+    "BudgetDecision",
+    "CostModel",
+    "relative_to_additive_eps",
+    "select_budget",
     "HoeffdingConstants",
     "constants_for",
     "pointwise_failure_prob",

@@ -27,6 +27,33 @@ __all__ = ["HoeffdingConstants", "constants_for", "required_num_features",
            "pointwise_failure_prob", "uniform_failure_prob",
            "pairwise_eps", "required_features_for_pairs"]
 
+# Shared floor for the covering ratio 32 R L / eps.  Both directions of the
+# Theorem 12 bound (required_d forward, uniform_failure_prob backward) MUST
+# floor identically, otherwise the round trip
+# ``uniform_failure_prob(consts, required_d(eps, delta), eps) <= delta``
+# breaks for large eps where the ratio drops below 1 (one side would use a
+# positive log-cover, the other a hugely negative one).
+_COVER_RATIO_FLOOR = 2.0
+
+
+def _require_positive(name: str, value: float) -> None:
+    if not value > 0.0:
+        raise ValueError(f"{name} must be > 0, got {name}={value!r}")
+
+
+def _require_delta(delta: float) -> None:
+    if not 0.0 < delta < 1.0:
+        raise ValueError(
+            f"delta must be a failure probability in (0, 1), got "
+            f"delta={delta!r}")
+
+
+def _require_n_pairs(n_pairs: int) -> None:
+    if n_pairs < 1:
+        raise ValueError(
+            f"n_pairs must be >= 1 (a union bound over zero pairs is "
+            f"vacuous), got n_pairs={n_pairs!r}")
+
 
 @dataclasses.dataclass(frozen=True)
 class HoeffdingConstants:
@@ -39,11 +66,38 @@ class HoeffdingConstants:
     c_proportional: float   # beyond-paper bound     f(R^2)
     lipschitz: float        # L of §4.1
 
+    def _c(self, measure: str) -> float:
+        return self.c_omega if measure == "geometric" else self.c_proportional
+
+    def _log_cover(self, eps: float) -> float:
+        """Log of the Theorem 12 covering term, floored consistently for
+        BOTH directions of the bound (see ``_COVER_RATIO_FLOOR``)."""
+        ratio = 32.0 * self.radius * self.lipschitz / eps
+        return 2.0 * self.dim * math.log(max(ratio, _COVER_RATIO_FLOOR))
+
+    def _log_uniform_failure(self, num_features: int, eps: float,
+                             measure: str) -> float:
+        c = self._c(measure)
+        return (math.log(2.0) + self._log_cover(eps)
+                - num_features * eps**2 / (8.0 * c**2))
+
     def required_d(self, eps: float, delta: float, measure: str = "geometric") -> int:
-        c = self.c_omega if measure == "geometric" else self.c_proportional
-        log_cover = 2.0 * self.dim * math.log(max(32.0 * self.radius * self.lipschitz / eps, 2.0))
-        d_req = 8.0 * c**2 / eps**2 * (log_cover + math.log(2.0 / delta))
-        return int(math.ceil(d_req))
+        _require_positive("eps", eps)
+        _require_delta(delta)
+        c = self._c(measure)
+        d_req = 8.0 * c**2 / eps**2 * (self._log_cover(eps) + math.log(2.0 / delta))
+        d = max(int(math.ceil(d_req)), 1)
+        # The ceil can land within float slop of the boundary (observed at
+        # D ~ 1e15: failure prob = delta * (1 + 3e-13)); bump until the
+        # round trip uniform_failure_prob(required_d(...)) <= delta holds
+        # exactly rather than approximately.  The guard must exponentiate
+        # the same way uniform_failure_prob does — comparing in log space
+        # admits one-ulp regressions after exp().
+        while math.exp(
+                min(self._log_uniform_failure(d, eps, measure), 50.0)
+        ) > delta:
+            d = int(math.ceil(d * (1.0 + 1e-12))) + 1
+        return d
 
     def eps_at(self, num_features: int, delta: float,
                measure: str = "geometric", *, tol: float = 1e-12) -> float:
@@ -63,6 +117,7 @@ class HoeffdingConstants:
         if num_features <= 0:
             raise ValueError(f"num_features must be positive, "
                              f"got {num_features}")
+        _require_delta(delta)
 
         def _ok(eps: float) -> bool:
             return self.required_d(eps, delta, measure) <= num_features
@@ -96,7 +151,12 @@ class HoeffdingConstants:
         specific sentinel pairs, not the whole domain, so it delegates
         here rather than to the Theorem 12 covering bound.
         """
-        c = self.c_omega if measure == "geometric" else self.c_proportional
+        if num_features <= 0:
+            raise ValueError(f"num_features must be positive, "
+                             f"got {num_features}")
+        _require_n_pairs(n_pairs)
+        _require_delta(delta)
+        c = self._c(measure)
         return math.sqrt(
             8.0 * c * c * math.log(2.0 * n_pairs / delta) / num_features)
 
@@ -104,10 +164,17 @@ class HoeffdingConstants:
                                     delta: float,
                                     measure: str = "geometric") -> int:
         """Inverse of :meth:`pairwise_eps`: D such that the fixed-pair
-        union bound certifies error <= eps w.p. >= 1 - delta."""
-        c = self.c_omega if measure == "geometric" else self.c_proportional
-        return int(math.ceil(
-            8.0 * c * c * math.log(2.0 * n_pairs / delta) / eps**2))
+        union bound certifies error <= eps w.p. >= 1 - delta.
+
+        The returned D is clamped to >= 1: for huge eps the raw formula
+        rounds to 0, which is invalid downstream as a feature budget.
+        """
+        _require_positive("eps", eps)
+        _require_n_pairs(n_pairs)
+        _require_delta(delta)
+        c = self._c(measure)
+        return max(int(math.ceil(
+            8.0 * c * c * math.log(2.0 * n_pairs / delta) / eps**2)), 1)
 
 
 def constants_for(
@@ -169,13 +236,14 @@ def uniform_failure_prob(
     consts: HoeffdingConstants, num_features: int, eps: float,
     measure: str = "geometric",
 ) -> float:
-    """Theorem 12's uniform bound over the whole domain (can exceed 1)."""
-    c = consts.c_omega if measure == "geometric" else consts.c_proportional
-    log_p = (
-        math.log(2.0)
-        + 2.0 * consts.dim * math.log(max(32.0 * consts.radius * consts.lipschitz / eps, 1e-9))
-        - num_features * eps**2 / (8.0 * c**2)
-    )
+    """Theorem 12's uniform bound over the whole domain (can exceed 1).
+
+    Shares the covering-ratio floor with :meth:`HoeffdingConstants.required_d`
+    (``_COVER_RATIO_FLOOR``), so the round trip
+    ``uniform_failure_prob(consts, required_d(eps, delta), eps) <= delta``
+    holds for every eps, including large eps where the ratio drops below 1.
+    """
+    log_p = consts._log_uniform_failure(num_features, eps, measure)
     return math.exp(min(log_p, 50.0))
 
 

@@ -251,9 +251,11 @@ class RMFeatureMap:
 def make_feature_map(
     kernel: DotProductKernel,
     input_dim: int,
-    num_features: int,
-    key: jax.Array,
+    num_features: Optional[int] = None,
+    key: Optional[jax.Array] = None,
     *,
+    eps: Optional[float] = None,
+    delta: Optional[float] = None,
     p: float = 2.0,
     measure: str = "geometric",
     h01: bool = False,
@@ -300,7 +302,33 @@ def make_feature_map(
     ``map.apply(precision=...)`` to run the kernels on bf16 operands.
     Explicit ``omega_dtype`` wins when both are given (``None`` — the
     default — means "derive from precision, else fp32").
+
+    Accuracy-target mode (ROADMAP open item 3, docs/adaptive.md): instead
+    of ``num_features``, pass ``eps=``/``delta=`` and the budget is
+    ``required_num_features(kernel, radius, input_dim, eps, delta)`` —
+    Theorem 12's smallest D certifying sup error <= eps w.p. >= 1 - delta
+    (the ``proportional`` measure uses its tighter beyond-paper constant).
+    Exactly one of ``num_features`` or the (eps, delta) pair is required.
     """
+    if key is None:
+        raise TypeError("make_feature_map requires key=")
+    if (eps is None) != (delta is None):
+        raise ValueError("pass BOTH eps and delta (or neither); got "
+                         f"eps={eps!r}, delta={delta!r}")
+    if eps is not None:
+        if num_features is not None:
+            raise ValueError(
+                "pass either num_features or (eps, delta), not both")
+        from repro.core.bounds import required_num_features
+
+        bound_measure = ("proportional" if measure == "proportional"
+                         else "geometric")
+        num_features = required_num_features(
+            kernel, radius, input_dim, eps, delta, p=p,
+            measure=bound_measure)
+    elif num_features is None:
+        raise ValueError("pass num_features or accuracy targets "
+                         "(eps=..., delta=...)")
     if omega_dtype is None:
         if precision is not None:
             from repro.common.dtypes import resolve_precision

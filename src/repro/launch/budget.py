@@ -1,0 +1,105 @@
+"""Shared ``--eps/--delta/--latency-budget`` plumbing for the launch CLIs.
+
+Both launchers (``repro.launch.serve``, ``repro.launch.train``) grow the
+same three flags: an accuracy target ``(--eps, --delta)`` and an optional
+``--latency-budget``. When given, the launcher stops trusting the arch
+config's hand-picked feature budget and instead asks
+:func:`repro.core.select.select_budget` for the (estimator, D, precision)
+that certifies the target at the lowest predicted featurization cost —
+priced from the committed ``BENCH_core.json`` cost model when present
+(docs/adaptive.md).
+
+The selection is applied to the resolved config via ``dataclasses.replace``
+on the ``rm`` sub-config, then re-validated, so the served/trained model
+runs at exactly the certified budget and the drift monitor watches the
+same (eps, delta) envelope the selection promised.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+__all__ = ["add_budget_args", "apply_budget_selection"]
+
+
+def add_budget_args(ap) -> None:
+    """Install the adaptive-accuracy flags on a launcher's argparser."""
+    ap.add_argument("--eps", type=float, default=None, metavar="EPS",
+                    help="target sup Gram error: size the RM feature "
+                         "budget from the Theorem 12 bound instead of the "
+                         "arch config (requires --delta; rm attention "
+                         "only, docs/adaptive.md)")
+    ap.add_argument("--delta", type=float, default=None, metavar="DELTA",
+                    help="failure probability for --eps; also tightens "
+                         "the --drift-every monitor to the same delta")
+    ap.add_argument("--latency-budget", type=float, default=None,
+                    metavar="SECONDS",
+                    help="prefer the fastest (estimator, precision) whose "
+                         "predicted featurization time fits (advisory: "
+                         "accuracy is a guarantee, latency a preference)")
+    ap.add_argument("--bench", default="BENCH_core.json", metavar="FILE",
+                    help="bench artifact the selection cost model is "
+                         "fitted from (skipped silently if absent)")
+
+
+def apply_budget_selection(cfg, args, *, tag: str = "launch",
+                           ) -> Tuple[object, Optional[object]]:
+    """Resolve ``--eps/--delta/--latency-budget`` against a config.
+
+    Returns ``(cfg, decision)`` — the config with the selected
+    (estimator, num_features, precision) spliced into ``cfg.rm`` and
+    re-validated, plus the full :class:`~repro.core.select.BudgetDecision`
+    (``None`` when no accuracy target was requested). Exits with a usage
+    error on half-specified targets or non-RM attention modes.
+    """
+    if args.eps is None and args.delta is None:
+        return cfg, None
+    if args.eps is None or args.delta is None:
+        raise SystemExit(
+            f"[{tag}] --eps and --delta must be given together "
+            "(the Theorem 12 bound prices an (eps, delta) pair)")
+    if cfg.attention_mode != "rm":
+        raise SystemExit(
+            f"[{tag}] --eps/--delta size the RM feature budget; "
+            f"attention_mode={cfg.attention_mode!r} has none "
+            "(pass --attention-mode rm)")
+
+    from repro.core import CostModel, ExponentialDotProductKernel
+    from repro.core.select import select_budget
+
+    rm = cfg.rm
+    cost = None
+    if args.bench and os.path.exists(args.bench):
+        cost = CostModel.from_file(args.bench)
+    else:
+        print(f"[{tag}] bench artifact {args.bench!r} not found; "
+              "selection runs without a cost model (no latency ranking)")
+    # The bound constants only exist for the measures core.bounds knows;
+    # the config's proportional default maps through, anything exotic
+    # falls back to the geometric constants (same rule as
+    # make_feature_map's accuracy-target mode).
+    measure = "proportional" if rm.measure == "proportional" else "geometric"
+    decision = select_budget(
+        ExponentialDotProductKernel(sigma2=rm.sigma2),
+        cfg.resolved_head_dim, args.eps, args.delta,
+        latency_budget_s=args.latency_budget,
+        # pin the family only when the user pinned it on the CLI
+        estimator=getattr(args, "estimator", None),
+        cost_model=cost, measure=measure, radius=0.9,
+    )
+    line = (f"[{tag}] selection: {decision.estimator}/{decision.precision} "
+            f"D={decision.num_features} certifies "
+            f"eps={decision.eps_certified:.4g} <= {decision.eps:.4g} "
+            f"at delta={decision.delta:g}")
+    if decision.predicted_latency_s is not None:
+        line += (f" (predicted featurize "
+                 f"{decision.predicted_latency_s * 1e3:.2f} ms/batch"
+                 f"{'' if decision.meets_latency_budget in (None, True) else ', OVER the latency budget'})")
+    print(line)
+    cfg = dataclasses.replace(
+        cfg, rm=dataclasses.replace(
+            rm, estimator=decision.estimator,
+            precision=decision.precision,
+            num_features=decision.num_features)).validate()
+    return cfg, decision

@@ -46,6 +46,8 @@ def make_engine(
     obs=None,
     scheduler: str = "continuous",
     buckets=None,
+    cfg=None,
+    accuracy_tiers=None,
 ):
     """Config -> params -> serving frontend, with every override forwarded.
 
@@ -54,26 +56,51 @@ def make_engine(
     ``"bucketed"`` the legacy batch-synchronous ``ServingEngine``
     (deprecated, docs/serving.md). Both expose the same submit/run surface.
 
+    ``cfg`` short-circuits the ``get_config`` resolution with an already-
+    resolved config (the launcher uses this after budget selection rewrites
+    ``cfg.rm``); ``accuracy_tiers`` maps tier names to feature-generation
+    counts (continuous scheduler only, docs/adaptive.md).
+
     The regression this guards (tests/test_serve_engine.py): ``estimator``
     must reach ``get_config`` so the engine's up-front registry validation
     sees the requested family — silently serving the default "rm" estimator
     under a ``--estimator tensor_sketch`` launch is exactly the conformance
     drift the registry exists to prevent.
     """
-    cfg = get_config(arch, smoke=smoke, attention_mode=attention_mode,
-                     estimator=estimator)
+    if cfg is None:
+        cfg = get_config(arch, smoke=smoke, attention_mode=attention_mode,
+                         estimator=estimator)
     if not cfg.causal:
         raise ValueError(f"{arch} is encoder-only; nothing to serve")
     params = init_model(cfg, jax.random.PRNGKey(seed))
     if scheduler == "continuous":
         return Scheduler(cfg, params, num_slots=num_slots, max_len=max_len,
-                         rng_seed=seed, buckets=buckets, mesh=mesh, obs=obs)
+                         rng_seed=seed, buckets=buckets, mesh=mesh, obs=obs,
+                         accuracy_tiers=accuracy_tiers)
     if scheduler == "bucketed":
+        if accuracy_tiers is not None:
+            raise ValueError("accuracy tiers need the continuous "
+                             "scheduler; the bucketed engine has no "
+                             "per-request admission surface")
         return ServingEngine(cfg, params, num_slots=num_slots,
                              max_len=max_len, rng_seed=seed, buckets=buckets,
                              mesh=mesh, obs=obs)
     raise ValueError(f"unknown scheduler {scheduler!r}: expected "
                      "'continuous' or 'bucketed'")
+
+
+def parse_tiers(spec: str):
+    """``"low:1,standard:2,high:4"`` -> ``{"low": 1, ...}`` (CLI format)."""
+    tiers = {}
+    for part in spec.split(","):
+        name, _, gens = part.partition(":")
+        name = name.strip()
+        if not name or not gens.strip().isdigit():
+            raise SystemExit(
+                f"[serve] bad --accuracy-tiers entry {part!r}: expected "
+                "name:generations pairs like 'low:1,standard:2,high:4'")
+        tiers[name] = int(gens)
+    return tiers
 
 
 def main(argv=None):
@@ -118,6 +145,14 @@ def main(argv=None):
                     help="run the online (eps, delta) Gram-drift check "
                          "every N decode iterations (0 = off; needs an "
                          "rm-family --attention-mode)")
+    ap.add_argument("--accuracy-tiers", default=None, metavar="SPEC",
+                    help="per-request accuracy tiers as name:generations "
+                         "pairs, e.g. 'low:1,standard:2,high:4' "
+                         "(continuous scheduler + rm attention; synthetic "
+                         "requests cycle through the tiers)")
+    from repro.launch.budget import add_budget_args, apply_budget_selection
+
+    add_budget_args(ap)
     args = ap.parse_args(argv)
 
     # platform knobs must land before the first device query initializes
@@ -137,6 +172,30 @@ def main(argv=None):
         print(f"[serve] mesh {dict(mesh.shape)} over {len(jax.devices())} "
               "devices")
 
+    # resolve the config ONCE: the budget selection (when requested)
+    # rewrites cfg.rm, and the drift monitor + engine must both see the
+    # selected budget, not the arch default
+    cfg = get_config(args.arch, smoke=args.smoke,
+                     attention_mode=args.attention_mode,
+                     estimator=args.estimator)
+    cfg, _decision = apply_budget_selection(cfg, args, tag="serve")
+
+    tiers = parse_tiers(args.accuracy_tiers) if args.accuracy_tiers \
+        else None
+    if tiers and _decision is not None:
+        # tiers split the budget into max(generations) equal blocks; round
+        # the selected D UP to the next multiple (eps_at only tightens)
+        import dataclasses
+
+        gmax = max(tiers.values())
+        d = cfg.rm.num_features
+        if d % gmax:
+            d += gmax - d % gmax
+            cfg = dataclasses.replace(cfg, rm=dataclasses.replace(
+                cfg.rm, num_features=d)).validate()
+            print(f"[serve] rounded D up to {d} (multiple of {gmax} "
+                  "tier generations)")
+
     obs = None
     if args.trace_out or args.metrics_out or args.drift_every:
         from repro import obs as obs_mod
@@ -145,18 +204,17 @@ def main(argv=None):
         if args.drift_every:
             # watch a map drawn exactly like the deployed attention
             # featurizer: same estimator family, measure and budget D
-            cfg_probe = get_config(
-                args.arch, smoke=args.smoke,
-                attention_mode=args.attention_mode,
-                estimator=args.estimator)
-            if cfg_probe.attention_mode == "rm":
+            if cfg.attention_mode == "rm":
                 from repro.core import ExponentialDotProductKernel
 
-                rm = cfg_probe.rm
+                rm = cfg.rm
                 drift = obs_mod.DriftMonitor.for_estimator(
                     ExponentialDotProductKernel(sigma2=rm.sigma2),
-                    cfg_probe.resolved_head_dim, rm.num_features,
-                    estimator=rm.estimator, measure=rm.measure)
+                    cfg.resolved_head_dim, rm.num_features,
+                    estimator=rm.estimator, measure=rm.measure,
+                    # the monitor holds the map to the SELECTED delta
+                    **({"delta": args.delta}
+                       if args.delta is not None else {}))
             else:
                 print("[serve] --drift-every ignored: attention mode is "
                       "not rm-family")
@@ -165,11 +223,10 @@ def main(argv=None):
                           install_kernel_tracing=True)
 
     engine = make_engine(
-        args.arch, smoke=args.smoke, attention_mode=args.attention_mode,
-        estimator=args.estimator, num_slots=args.slots, max_len=args.max_len,
-        mesh=mesh, obs=obs, scheduler=args.scheduler,
+        args.arch, num_slots=args.slots, max_len=args.max_len,
+        mesh=mesh, obs=obs, scheduler=args.scheduler, cfg=cfg,
+        accuracy_tiers=tiers,
     )
-    cfg = engine.cfg
     t0 = time.time()
     if args.arrival_trace:
         if args.scheduler != "continuous":
@@ -183,12 +240,24 @@ def main(argv=None):
               f"{args.arrival_trace} ({raw['truncated']} truncated)")
     else:
         rng = np.random.default_rng(0)
+        tier_names = sorted(tiers) if tiers else None
         for i in range(args.requests):
             prompt = rng.integers(0, cfg.vocab_size,
                                   size=int(rng.integers(4, 24)))
+            # synthetic load cycles through the configured tiers so every
+            # tier's admission path (and tier_features certification) runs
+            tier = tier_names[i % len(tier_names)] if tier_names else None
             engine.submit(Request(request_id=i, prompt=prompt,
-                                  max_new_tokens=args.max_new))
+                                  max_new_tokens=args.max_new,
+                                  accuracy_tier=tier))
         done = engine.run()
+        if tier_names:
+            for rid in sorted(done):
+                s = done[rid]
+                if s.tier_features is not None:
+                    print(f"  req {rid}: tier="
+                          f"{s.request.accuracy_tier} certified at "
+                          f"D={s.tier_features}")
     wall = time.time() - t0
     toks = sum(len(s.generated) for s in done.values())
     print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.1f}s "

@@ -46,10 +46,14 @@ def main():
     ap.add_argument("--drift-every", type=int, default=0, metavar="N",
                     help="run the online (eps, delta) Gram-drift check "
                          "every N train steps (0 = off; rm attention only)")
+    from repro.launch.budget import add_budget_args, apply_budget_selection
+
+    add_budget_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
                      attention_mode=args.attention_mode)
+    cfg, _decision = apply_budget_selection(cfg, args, tag="train")
     if cfg.frontend != "none":
         raise SystemExit(
             f"{args.arch} needs modality inputs; use examples/train_lm.py "
@@ -78,7 +82,10 @@ def main():
             drift = obs_mod.DriftMonitor.for_estimator(
                 ExponentialDotProductKernel(sigma2=rm.sigma2),
                 cfg.resolved_head_dim, rm.num_features,
-                estimator=rm.estimator, measure=rm.measure)
+                estimator=rm.estimator, measure=rm.measure,
+                # hold the monitored map to the SELECTED delta
+                **({"delta": args.delta}
+                   if args.delta is not None else {}))
         elif args.drift_every:
             print("[train] --drift-every ignored: attention mode is not "
                   "rm-family")

@@ -159,6 +159,15 @@ class Obs:
             self.event("drift/violation", sup_err=report.sup_err,
                        eps_bound=report.eps_bound,
                        num_features=report.num_features)
+            rec = self.drift.recommend()
+            if rec is not None:
+                self.gauge("drift/recommended_features",
+                           rec.num_features_target)
+                self.event("drift/grow_recommendation",
+                           num_features_now=rec.num_features_now,
+                           num_features_target=rec.num_features_target,
+                           eps_bound_target=rec.eps_bound_target,
+                           reason=rec.reason)
 
     # -- lifecycle ------------------------------------------------------------
     def write_metrics(self, path) -> None:

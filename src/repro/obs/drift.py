@@ -34,7 +34,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-__all__ = ["DriftReport", "DriftMonitor", "hoeffding_eps"]
+__all__ = ["DriftReport", "DriftMonitor", "GrowthRecommendation",
+           "hoeffding_eps"]
 
 
 def hoeffding_eps(kernel, radius: float, dim: int, num_features: int,
@@ -66,6 +67,24 @@ class DriftReport:
     num_features: int
     n_pairs: int
     ok: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowthRecommendation:
+    """``DriftMonitor.recommend()``'s answer to an (eps, delta) violation:
+    double the budget (docs/adaptive.md's drift -> grow loop).
+
+    ``num_features_target`` is what a ``GrowableFeatureMap.grow()`` (or a
+    rebuild at 2D) buys; ``eps_bound_target`` is the envelope the monitor
+    would hold the grown map to — tighter by ``1/sqrt(2)`` per doubling.
+    """
+
+    num_features_now: int
+    num_features_target: int
+    eps_bound_now: float
+    eps_bound_target: float
+    sup_err: float
+    reason: str
 
 
 class DriftMonitor:
@@ -180,3 +199,44 @@ class DriftMonitor:
                                 num_features=int(self.fm.output_dim),
                                 n_pairs=self.n_pairs, ok=ok)
         return self.last
+
+    def recommend(self) -> Optional[GrowthRecommendation]:
+        """The adaptive-accuracy hook: after a violating ``check()``,
+        recommend the doubled budget.
+
+        Returns ``None`` while the last check (or no check yet) is within
+        the envelope.  On a violation, returns the doubled feature budget
+        and the tightened envelope it buys — ``GrowableFeatureMap.grow()``
+        applies it without redrawing, after which the caller rebinds the
+        monitor via :meth:`rebind` and the next ``check()`` runs against
+        the stricter bound.  Doubling (not jumping straight to
+        ``required_d`` at the observed error) keeps the loop geometric:
+        repeated violations escalate exponentially, transient ones cost
+        one doubling.
+        """
+        if self.last is None or self.last.ok:
+            return None
+        now = int(self.fm.output_dim)
+        target = 2 * now
+        stat = hoeffding_eps(
+            self.kernel, self.radius, int(self.fm.plan.input_dim),
+            target, self.n_pairs, self.delta, measure=self.measure)
+        bias = float(self.fm.plan.truncation_bias(self.radius))
+        return GrowthRecommendation(
+            num_features_now=now,
+            num_features_target=target,
+            eps_bound_now=self.last.eps_bound,
+            eps_bound_target=stat + bias,
+            sup_err=self.last.sup_err,
+            reason=(f"sup_err={self.last.sup_err:.3g} exceeded "
+                    f"eps_bound={self.last.eps_bound:.3g} at "
+                    f"D={now}; double to D={target}"),
+        )
+
+    def rebind(self, feature_map) -> None:
+        """Point the monitor at a grown/rebuilt map (same kernel & domain).
+        Counters survive — growth is part of one monitored deployment —
+        but the stale report is dropped so ``recommend()`` doesn't re-fire
+        off the pre-growth check."""
+        self.fm = feature_map
+        self.last = None

@@ -49,6 +49,10 @@ class Request:
     temperature: float = 0.0
     eos_token: Optional[int] = None
     priority: int = 0                   # higher admits first (Scheduler only)
+    accuracy_tier: Optional[str] = None  # per-request tier (Scheduler only):
+    #   a key into the scheduler's accuracy_tiers map, resolved to a feature
+    #   generation count (docs/adaptive.md) and certified on the request's
+    #   admit event / RequestState.tier_features
 
 
 @dataclasses.dataclass
@@ -64,6 +68,8 @@ class RequestState:
     t_done: Optional[float] = None
     t_tokens: List[float] = dataclasses.field(default_factory=list)
     admissions: int = 0                 # times admitted (> 1 after eviction)
+    tier_features: Optional[int] = None  # feature budget certified for this
+    #   request's accuracy tier (None = full budget / tiers not configured)
 
 
 def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:

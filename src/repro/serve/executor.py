@@ -95,7 +95,7 @@ class StepExecutor:
 
     def __init__(self, cfg: ModelConfig, params: Any, num_slots: int,
                  max_len: int, *, buckets: Optional[Sequence[int]] = None,
-                 mesh: Any = None):
+                 mesh: Any = None, feature_generations: int = 1):
         if not cfg.causal:
             raise ValueError("encoder-only models cannot be served "
                              "autoregressively")
@@ -103,6 +103,13 @@ class StepExecutor:
         # policy and fusion mode all raise here with the valid options.
         self.estimator: Optional[str] = None
         self.fused_attention = False
+        feature_generations = int(feature_generations)
+        if feature_generations < 1:
+            raise ValueError(
+                f"feature_generations must be >= 1, got "
+                f"{feature_generations}")
+        self.feature_generations = feature_generations
+        self.generation_features: Optional[int] = None
         if cfg.attention_mode == "rm":
             from repro.common.dtypes import resolve_precision
             from repro.core import registry
@@ -111,6 +118,23 @@ class StepExecutor:
             self.estimator = registry.get(cfg.rm.estimator).name
             resolve_precision(cfg.rm.precision)
             self.fused_attention = rm_fuse_enabled(cfg)
+            # Accuracy tiers (docs/adaptive.md): the feature budget splits
+            # into fold_in-keyed generations; a tier certifies the prefix
+            # of g generations.  The split must be exact so every tier's
+            # budget is a whole number of generations.
+            if cfg.rm.num_features % feature_generations != 0:
+                raise ValueError(
+                    f"cfg.rm.num_features={cfg.rm.num_features} must "
+                    f"divide evenly into feature_generations="
+                    f"{feature_generations} (per-tier budgets are whole "
+                    "generations — see docs/adaptive.md)")
+            self.generation_features = (cfg.rm.num_features
+                                        // feature_generations)
+        elif feature_generations != 1:
+            raise ValueError(
+                f"feature_generations={feature_generations} requires the "
+                f"RM attention mode; {cfg.attention_mode!r} has no "
+                "feature budget to tier")
         self.cfg = cfg
         self.params = params
         self.num_slots = int(num_slots)
@@ -145,6 +169,26 @@ class StepExecutor:
                 cache_partition_specs(probe, mesh))
         self.cache = None
         self.reset_cache()
+
+    # -- accuracy tiers -------------------------------------------------------
+    def tier_features(self, generations: int) -> int:
+        """Feature budget a tier of ``generations`` generations certifies.
+
+        The RM budget splits into ``feature_generations`` equal fold_in-
+        keyed blocks (the ``GrowableFeatureMap`` layout); a request at
+        tier g is certified against the first ``g * generation_features``
+        columns' (eps, delta) bound (docs/adaptive.md).
+        """
+        if self.generation_features is None:
+            raise ValueError(
+                "accuracy tiers require the RM attention mode "
+                f"(attention_mode={self.cfg.attention_mode!r})")
+        g = int(generations)
+        if not 1 <= g <= self.feature_generations:
+            raise ValueError(
+                f"tier generations={generations} out of range [1, "
+                f"{self.feature_generations}]")
+        return g * self.generation_features
 
     # -- cache lifecycle ------------------------------------------------------
     @property

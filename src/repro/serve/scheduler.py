@@ -105,10 +105,29 @@ class Scheduler:
                  buckets: Optional[Sequence[int]] = None,
                  max_admits_per_step: Optional[int] = None,
                  max_restarts: int = 0, straggler_monitor: Any = None,
-                 mesh: Any = None, obs: Any = None):
+                 mesh: Any = None, obs: Any = None,
+                 accuracy_tiers: Optional[Dict[str, int]] = None):
         self.obs = _obs_resolve(obs)
+        # Per-request accuracy tiers (docs/adaptive.md): tier name ->
+        # feature generation count. The executor splits the RM budget into
+        # max(tiers) equal fold_in-keyed generations; a request at tier g
+        # is certified against the g-generation feature prefix's (eps,
+        # delta) bound. Validation (rm mode, even split, range) lives in
+        # the executor so a bad tier map fails at construction.
+        self.accuracy_tiers: Optional[Dict[str, int]] = None
+        feature_generations = 1
+        if accuracy_tiers:
+            for name, gens in accuracy_tiers.items():
+                if int(gens) < 1:
+                    raise ValueError(
+                        f"accuracy tier {name!r} must map to >= 1 "
+                        f"generations, got {gens}")
+            self.accuracy_tiers = {k: int(v)
+                                   for k, v in accuracy_tiers.items()}
+            feature_generations = max(self.accuracy_tiers.values())
         self.executor = StepExecutor(cfg, params, num_slots, max_len,
-                                     buckets=buckets, mesh=mesh)
+                                     buckets=buckets, mesh=mesh,
+                                     feature_generations=feature_generations)
         self.estimator = self.executor.estimator
         self.fused_attention = self.executor.fused_attention
         self.cfg = cfg
@@ -166,6 +185,17 @@ class Scheduler:
                 f"prompt length {len(request.prompt)} exceeds engine "
                 f"max_len {self.max_len}: the decode cache has no room "
                 "for generated tokens; raise max_len or truncate")
+        if request.accuracy_tier is not None:
+            if not self.accuracy_tiers:
+                raise ValueError(
+                    f"request {rid} asks for accuracy_tier="
+                    f"{request.accuracy_tier!r} but the scheduler was "
+                    "built without accuracy_tiers=")
+            if request.accuracy_tier not in self.accuracy_tiers:
+                raise ValueError(
+                    f"unknown accuracy_tier {request.accuracy_tier!r} "
+                    f"for request {rid}; configured tiers: "
+                    f"{sorted(self.accuracy_tiers)}")
         seq = self._seq
         self._seq += 1
         self._seq_of[rid] = seq
@@ -173,7 +203,8 @@ class Scheduler:
         heapq.heappush(self._heap, (-int(request.priority), seq, request))
         self.obs.event("request/submit", request_id=rid,
                        prompt_len=len(request.prompt),
-                       priority=int(request.priority))
+                       priority=int(request.priority),
+                       accuracy_tier=request.accuracy_tier)
         self.obs.counter("serve/requests_submitted")
         self.obs.gauge("serve/queue_depth", len(self._heap))
 
@@ -241,6 +272,14 @@ class Scheduler:
         return self.finished
 
     # -- internals ------------------------------------------------------------
+    def _tier_features(self, req: Request) -> Optional[int]:
+        """The feature budget certified for this request's tier (None when
+        tiers are not in play)."""
+        if req.accuracy_tier is None or not self.accuracy_tiers:
+            return None
+        return self.executor.tier_features(
+            self.accuracy_tiers[req.accuracy_tier])
+
     def _request_key(self, rid: int, token_idx: int) -> jax.Array:
         return jax.random.fold_in(
             jax.random.fold_in(self._base_key, rid), token_idx)
@@ -295,10 +334,13 @@ class Scheduler:
         tb = self.executor.bucket_for(t)
         attempt = self._attempts.get(rid, 0) + 1
         self._attempts[rid] = attempt
+        tier_features = self._tier_features(req)
         with self.obs.span("admit", request_id=rid, slot=slot, bucket=tb,
                            attempt=attempt):
             self.obs.event("request/admit", request_id=rid, slot=slot,
-                           bucket=tb, attempt=attempt)
+                           bucket=tb, attempt=attempt,
+                           accuracy_tier=req.accuracy_tier,
+                           tier_features=tier_features)
             with self.obs.span("prefill", request_id=rid, bucket=tb,
                                prompt_len=t):
                 logits, cache1, _ = self.executor.prefill(req.prompt)
@@ -307,7 +349,8 @@ class Scheduler:
         if t_enqueue is None:
             t_enqueue = self.obs.now()
         state = RequestState(request=req, slot=slot, position=t,
-                             t_enqueue=t_enqueue, admissions=attempt)
+                             t_enqueue=t_enqueue, admissions=attempt,
+                             tier_features=tier_features)
         info.admitted.append(rid)
         # first generated token from the LAST REAL prefill logit, sampled
         # on the request's own key stream (token index 0)

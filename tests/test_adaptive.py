@@ -1,0 +1,386 @@
+"""The adaptive-accuracy subsystem end to end (docs/adaptive.md).
+
+Four surfaces, one contract:
+
+* ``select_budget`` — the (eps, delta) -> (estimator, D, precision)
+  decision always CERTIFIES the accuracy target (``eps_at(D, delta) <=
+  eps`` for every kernel in the grid) and prices candidates from the
+  ``CostModel`` honestly (latency budget is a preference, accuracy a
+  guarantee);
+* ``make_feature_map(eps=..., delta=...)`` — the accuracy-target
+  constructor mode sizes D from the same inversion;
+* the drift -> grow control loop — ``DriftMonitor.recommend()`` fires
+  exactly on violations, ``GrowableFeatureMap.grow()`` + ``rebind``
+  tighten the envelope, and the whole loop is deterministic under
+  ``FakeClock``;
+* serving tiers — the Scheduler maps per-request tier names to feature
+  generations through ``StepExecutor.tier_features``.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    ExponentialDotProductKernel,
+    PolynomialKernel,
+    make_feature_map,
+    make_growable_feature_map,
+    select_budget,
+)
+from repro.core.bounds import constants_for
+from repro.core.select import main as select_main
+from repro.core.select import relative_to_additive_eps, selection_section
+
+KERNELS = [ExponentialDotProductKernel(1.0), PolynomialKernel(3, 1.0),
+           PolynomialKernel(7, 0.5)]
+
+
+def _payload():
+    """A minimal two-shape bench payload the CostModel can fit."""
+    return {
+        "schema_version": 2,
+        "backend": "cpu",
+        "interpret": True,
+        "results": {
+            "s1": {"kernel": "exp", "d": 16, "F": 128, "batch": 64,
+                   "cells": {
+                       "rm/fp32": {"fused_feats_per_s": 1e7},
+                       "rm/bf16": {"fused_feats_per_s": 2e7},
+                       "ctr/fp32": {"fused_feats_per_s": 5e6},
+                   }},
+            "s2": {"kernel": "exp", "d": 16, "F": 512, "batch": 64,
+                   "cells": {
+                       "rm/fp32": {"fused_feats_per_s": 4e7},
+                       "rm/bf16": {"fused_feats_per_s": 2e7},
+                       "ctr/fp32": {"fused_feats_per_s": 5e6},
+                   }},
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# CostModel
+# ---------------------------------------------------------------------------
+def test_cost_model_rows_and_coverage():
+    cm = CostModel.from_payload(_payload())
+    assert cm.covers("rm", "fp32") and cm.covers("ctr", "fp32")
+    assert not cm.covers("tensor_sketch", "fp32")
+    assert cm.missing_cells(["rm", "tensor_sketch"], ["fp32", "bf16"]) == [
+        "tensor_sketch/fp32", "tensor_sketch/bf16"]
+    # log-F interpolation: between the benched Fs, strictly between the
+    # benched throughputs; outside, clamped to the nearest measurement
+    t128 = cm.throughput("rm", "fp32", 128)
+    t512 = cm.throughput("rm", "fp32", 512)
+    tmid = cm.throughput("rm", "fp32", 256)
+    assert t128 == pytest.approx(1e7) and t512 == pytest.approx(4e7)
+    assert t128 < tmid < t512
+    assert cm.throughput("rm", "fp32", 8) == pytest.approx(t128)
+    assert cm.throughput("rm", "fp32", 10**6) == pytest.approx(t512)
+    # latency = batch * F / throughput
+    assert cm.predict_latency_s("rm", "fp32", 128, 64) == pytest.approx(
+        64 * 128 / 1e7)
+    with pytest.raises(KeyError, match="tensor_sketch/fp32"):
+        cm.throughput("tensor_sketch", "fp32", 128)
+
+
+# ---------------------------------------------------------------------------
+# select_budget: the accuracy guarantee
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kernel", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("eps,delta", [(0.5, 0.05), (0.1, 0.01),
+                                       (2.0, 0.5)])
+def test_decision_certifies_target(kernel, eps, delta):
+    dec = select_budget(kernel, 12, eps, delta, measure="proportional",
+                        radius=0.8)
+    consts = constants_for(kernel, 0.8, 12, 2.0)
+    assert dec.eps_certified <= eps
+    assert consts.eps_at(dec.num_features, delta,
+                         "proportional") <= eps
+    assert dec.eps_certified == pytest.approx(
+        consts.eps_at(dec.num_features, delta, "proportional"))
+
+
+def test_latency_ranking_and_budget_flag():
+    cm = CostModel.from_payload(_payload())
+    kern = ExponentialDotProductKernel(1.0)
+    # free choice: the fastest PRICED candidate wins (rm/bf16 at small F
+    # ... but D here is large, so rank at the selected D)
+    dec = select_budget(kern, 16, 1.0, 0.1, cost_model=cm,
+                        measure="proportional", radius=0.7, batch=64)
+    priced = [c for c in dec.candidates
+              if c["predicted_latency_s"] is not None]
+    assert dec.predicted_latency_s == min(c["predicted_latency_s"]
+                                          for c in priced)
+    # an impossible latency budget: fastest still returned, flagged False
+    tight = select_budget(kern, 16, 1.0, 0.1, cost_model=cm,
+                          measure="proportional", radius=0.7, batch=64,
+                          latency_budget_s=1e-12)
+    assert tight.meets_latency_budget is False
+    assert tight.num_features == dec.num_features  # accuracy unmoved
+    # a generous budget: flagged True
+    loose = select_budget(kern, 16, 1.0, 0.1, cost_model=cm,
+                          measure="proportional", radius=0.7, batch=64,
+                          latency_budget_s=1e9)
+    assert loose.meets_latency_budget is True
+
+
+def test_estimator_pin_and_platform_guard():
+    cm = CostModel.from_payload(_payload())
+    dec = select_budget(ExponentialDotProductKernel(1.0), 16, 1.0, 0.1,
+                        estimator="ctr", cost_model=cm,
+                        measure="proportional", radius=0.7)
+    assert dec.estimator == "ctr"
+    assert {c["estimator"] for c in dec.candidates} == {"ctr"}
+    with pytest.raises(KeyError, match="unknown"):
+        select_budget(ExponentialDotProductKernel(1.0), 16, 1.0, 0.1,
+                      estimator="nope")
+    with pytest.raises(ValueError, match="platform"):
+        select_budget(ExponentialDotProductKernel(1.0), 16, 1.0, 0.1,
+                      cost_model=cm, platform="tpu")
+    # matching platform passes
+    ok = select_budget(ExponentialDotProductKernel(1.0), 16, 1.0, 0.1,
+                       cost_model=cm, platform="cpu",
+                       measure="proportional", radius=0.7)
+    assert ok.backend == "cpu"
+
+
+def test_relative_mode():
+    kern = ExponentialDotProductKernel(1.0)
+    # min |f| on [-R^2, R^2] for exp is exp(-R^2)
+    eps_abs = relative_to_additive_eps(kern, 0.8, 0.5)
+    assert eps_abs == pytest.approx(0.5 * np.exp(-0.64), rel=1e-3)
+    dec = select_budget(kern, 8, 0.5, 0.1, relative=True, radius=0.8,
+                        measure="proportional")
+    assert dec.eps == pytest.approx(eps_abs, rel=1e-3)
+    assert dec.eps_certified <= dec.eps
+    # odd polynomial crosses zero on the ball -> loud failure
+    with pytest.raises(ValueError, match="relative"):
+        relative_to_additive_eps(PolynomialKernel(3, 0.0), 1.0, 0.5)
+
+
+def test_selection_section_certifies_every_shape(tmp_path):
+    payload = _payload()
+    sec = selection_section(payload, targets=[(0.5, 0.1)])
+    assert set(sec["decisions"]) == {"s1", "s2"}
+    for decs in sec["decisions"].values():
+        (dec,) = decs
+        assert dec["eps_certified"] <= dec["eps"]
+        assert dec["predicted_latency_s"] is not None
+
+
+def test_select_cli(tmp_path, capsys):
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(_payload()))
+    rc = select_main(["--kernel", "exp", "--dim", "16", "--eps", "1.0",
+                      "--delta", "0.1", "--bench", str(bench)])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["eps_certified"] <= out["eps"]
+    # coverage gate: the toy payload misses cells -> exit 1
+    rc = select_main(["--bench", str(bench), "--check-coverage"])
+    assert rc == 1
+    assert "missing" in capsys.readouterr().out
+    # no artifact at all under --check-coverage -> exit 1
+    rc = select_main(["--bench", str(tmp_path / "none.json"),
+                      "--check-coverage"])
+    assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# make_feature_map accuracy-target mode
+# ---------------------------------------------------------------------------
+def test_make_feature_map_eps_mode():
+    kern = ExponentialDotProductKernel(1.0)
+    fm = make_feature_map(kern, 6, key=jax.random.PRNGKey(0), eps=1.5,
+                          delta=0.2, radius=0.7, measure="proportional")
+    consts = constants_for(kern, 0.7, 6, 2.0)
+    d_req = consts.required_d(1.5, 0.2, "proportional")
+    # eps mode IS num_features mode at the Theorem 12 inversion: the two
+    # constructors produce identical plans
+    ref = make_feature_map(kern, 6, d_req, jax.random.PRNGKey(0),
+                           radius=0.7, measure="proportional")
+    assert fm.plan == ref.plan
+    assert fm.output_dim == ref.output_dim
+    with pytest.raises(ValueError, match="delta"):
+        make_feature_map(kern, 6, key=jax.random.PRNGKey(0), eps=0.5)
+    with pytest.raises(ValueError, match="num_features"):
+        make_feature_map(kern, 6, 64, jax.random.PRNGKey(0), eps=0.5,
+                         delta=0.1)
+    with pytest.raises(ValueError, match="num_features"):
+        make_feature_map(kern, 6, key=jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# the drift -> grow loop, deterministic under FakeClock
+# ---------------------------------------------------------------------------
+def test_drift_recommend_fires_only_on_violation():
+    from repro.obs.drift import DriftMonitor
+
+    kern = ExponentialDotProductKernel(1.0)
+    gm = make_growable_feature_map(kern, 6, jax.random.PRNGKey(0),
+                                   base_features=64,
+                                   measure="proportional")
+    mon = DriftMonitor(gm, kern, delta=0.05, radius=0.7,
+                       measure="proportional")
+    assert mon.recommend() is None          # no check yet
+    rep = mon.check()
+    if rep.ok:
+        assert mon.recommend() is None      # in-envelope -> no growth
+    # force a violation deterministically: a margin far below any real
+    # error makes the SAME report a violation without touching the map
+    mon_tight = DriftMonitor(gm, kern, delta=0.05, radius=0.7,
+                             measure="proportional", margin=1e-9)
+    rep = mon_tight.check()
+    assert not rep.ok
+    rec = mon_tight.recommend()
+    assert rec is not None
+    assert rec.num_features_target == 2 * gm.output_dim
+    assert rec.eps_bound_target < rec.eps_bound_now
+    assert str(gm.output_dim) in rec.reason
+
+
+def test_drift_grow_rebind_loop_deterministic():
+    """The full control loop under FakeClock: violation -> recommend ->
+    grow -> rebind -> the envelope tightens by 1/sqrt(2) per doubling and
+    two identical runs produce identical trajectories."""
+    from repro.obs import Obs, clock
+    from repro.obs.drift import DriftMonitor
+
+    def run():
+        kern = ExponentialDotProductKernel(1.0)
+        gm = make_growable_feature_map(kern, 6, jax.random.PRNGKey(0),
+                                       base_features=48,
+                                       measure="proportional")
+        mon = DriftMonitor(gm, kern, delta=0.05, radius=0.7,
+                           measure="proportional", margin=1e-9)
+        obs = Obs(clock=clock.FakeClock(step=0.5), drift=mon,
+                  drift_every=1)
+        budgets, bounds = [], []
+        for _ in range(3):
+            obs.tick_drift()
+            rec = mon.recommend()
+            assert rec is not None          # margin guarantees violation
+            gm = gm.grow_to(rec.num_features_target)
+            mon.rebind(gm)
+            budgets.append(gm.output_dim)
+            bounds.append(rec.eps_bound_target)
+        obs.close()
+        return budgets, bounds, mon.checks, mon.violations
+
+    a = run()
+    b = run()
+    assert a == b                            # FakeClock determinism
+    budgets, bounds, checks, violations = a
+    assert budgets == sorted(budgets)
+    assert budgets[0] < budgets[1] < budgets[2]   # geometric escalation
+    assert bounds[0] > bounds[1] > bounds[2]      # envelope tightens
+    assert checks == 3 and violations == 3
+    # rebind drops the stale report: recommend() can't re-fire pre-check
+    kern = ExponentialDotProductKernel(1.0)
+    gm = make_growable_feature_map(kern, 6, jax.random.PRNGKey(0),
+                                   base_features=48,
+                                   measure="proportional")
+    mon = DriftMonitor(gm, kern, margin=1e-9, radius=0.7,
+                       measure="proportional")
+    mon.check()
+    assert mon.recommend() is not None
+    mon.rebind(gm.grow())
+    assert mon.recommend() is None
+
+
+def test_obs_emits_grow_recommendation_event(tmp_path):
+    from repro.obs import Obs, clock
+    from repro.obs.drift import DriftMonitor
+
+    kern = ExponentialDotProductKernel(1.0)
+    gm = make_growable_feature_map(kern, 6, jax.random.PRNGKey(0),
+                                   base_features=48,
+                                   measure="proportional")
+    mon = DriftMonitor(gm, kern, margin=1e-9, radius=0.7,
+                       measure="proportional")
+    path = tmp_path / "trace.jsonl"
+    obs = Obs(trace_path=str(path), clock=clock.FakeClock(step=0.5),
+              drift=mon, drift_every=1)
+    obs.tick_drift()
+    obs.close()
+    rows = [json.loads(line) for line in path.read_text().splitlines()
+            if line.strip()]
+    names = [r.get("name") for r in rows]
+    assert "drift/violation" in names
+    assert "drift/grow_recommendation" in names
+    rec_row = next(r for r in rows
+                   if r.get("name") == "drift/grow_recommendation")
+    assert rec_row["attrs"]["num_features_target"] == 2 * gm.output_dim
+
+
+# ---------------------------------------------------------------------------
+# serving tiers
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiered_scheduler():
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import Scheduler
+
+    cfg = get_config("qwen3-1.7b", smoke=True, attention_mode="rm")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, Scheduler(
+        cfg, params, num_slots=2, max_len=64, rng_seed=0,
+        accuracy_tiers={"low": 1, "standard": 2, "high": 4})
+
+
+def test_scheduler_tier_features(tiered_scheduler):
+    from repro.serve import Request
+
+    cfg, sched = tiered_scheduler
+    per_gen = cfg.rm.num_features // 4
+    assert sched.executor.feature_generations == 4
+    assert sched.executor.tier_features(1) == per_gen
+    assert sched.executor.tier_features(4) == cfg.rm.num_features
+    with pytest.raises(ValueError, match="range"):
+        sched.executor.tier_features(5)
+    prompts = np.arange(6) % cfg.vocab_size
+    for i, tier in enumerate(["low", "high", None]):
+        sched.submit(Request(request_id=i, prompt=prompts,
+                             max_new_tokens=2, accuracy_tier=tier))
+    done = sched.run()
+    assert done[0].tier_features == per_gen
+    assert done[1].tier_features == cfg.rm.num_features
+    assert done[2].tier_features is None     # untiered -> full budget
+
+
+def test_scheduler_rejects_bad_tiers(tiered_scheduler):
+    from repro.serve import Request
+
+    cfg, sched = tiered_scheduler
+    prompt = np.arange(4) % cfg.vocab_size
+    with pytest.raises(ValueError, match="gold"):
+        sched.submit(Request(request_id=99, prompt=prompt,
+                             accuracy_tier="gold"))
+
+
+def test_executor_tier_validation():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import Scheduler
+    from repro.serve.executor import StepExecutor
+
+    cfg = get_config("qwen3-1.7b", smoke=True, attention_mode="rm")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    # generations must divide the budget
+    bad = cfg.rm.num_features + 1
+    with pytest.raises(ValueError, match="divide"):
+        StepExecutor(cfg, params, 1, 32, feature_generations=bad)
+    # tiers need an RM feature budget
+    exact = dataclasses.replace(cfg, attention_mode="exact").validate()
+    params_exact = init_model(exact, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="rm|RM"):
+        StepExecutor(exact, params_exact, 1, 32, feature_generations=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        Scheduler(cfg, params, num_slots=1, max_len=32,
+                  accuracy_tiers={"bad": 0})

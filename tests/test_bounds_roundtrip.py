@@ -29,6 +29,7 @@ from repro.core.bounds import (
     constants_for,
     pairwise_eps,
     required_features_for_pairs,
+    uniform_failure_prob,
 )
 from repro.obs.drift import hoeffding_eps
 
@@ -91,6 +92,49 @@ def test_sweep_covering_roundtrip(kname, measure, eps, delta):
 def test_sweep_pairwise_roundtrip(kname, measure, eps, n_pairs):
     check_pairwise_roundtrip(KERNELS[kname], 0.5, 8, eps, n_pairs, 0.05,
                              measure)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+@pytest.mark.parametrize("kname", sorted(KERNELS))
+@pytest.mark.parametrize("eps", [1e-3, 0.1, 1.0, 10.0, 100.0, 1e6])
+@pytest.mark.parametrize("delta", [1e-6, 0.05, 0.99])
+def test_uniform_failure_prob_roundtrip(kname, measure, eps, delta):
+    """Regression pin (ISSUE 10): required_d and uniform_failure_prob share
+    ONE covering-ratio floor, so buying the demanded budget always drives
+    the uniform failure probability down to delta — including large eps,
+    where the floors previously disagreed (2.0 vs 1e-9), and huge D, where
+    float slop in the ceil previously left the probability a few ulps above
+    delta."""
+    consts = constants_for(KERNELS[kname], 0.5, 8)
+    d_req = consts.required_d(eps, delta, measure)
+    assert d_req >= 1
+    assert uniform_failure_prob(consts, d_req, eps, measure) <= delta
+
+
+def test_pair_bounds_validate_arguments():
+    """Regression pins (ISSUE 10): the pair-bound APIs reject invalid
+    inputs with errors naming the offending argument, instead of a bare
+    ``math domain error`` (n_pairs=0) or a D=0 budget (huge eps)."""
+    k = KERNELS["exp"]
+    with pytest.raises(ValueError, match="n_pairs"):
+        pairwise_eps(k, 0.5, 8, 128, 0, 0.05)
+    with pytest.raises(ValueError, match="n_pairs"):
+        required_features_for_pairs(k, 0.5, 8, 0.1, 0, 0.05)
+    for bad_delta in (0.0, 1.0, 1.5, -0.1):
+        with pytest.raises(ValueError, match="delta"):
+            pairwise_eps(k, 0.5, 8, 128, 10, bad_delta)
+        with pytest.raises(ValueError, match="delta"):
+            required_features_for_pairs(k, 0.5, 8, 0.1, 10, bad_delta)
+        with pytest.raises(ValueError, match="delta"):
+            constants_for(k, 0.5, 8).required_d(0.1, bad_delta)
+    with pytest.raises(ValueError, match="eps"):
+        required_features_for_pairs(k, 0.5, 8, -1.0, 10, 0.05)
+    with pytest.raises(ValueError, match="eps"):
+        constants_for(k, 0.5, 8).required_d(0.0, 0.05)
+    with pytest.raises(ValueError, match="num_features"):
+        pairwise_eps(k, 0.5, 8, 0, 10, 0.05)
+    # huge eps: the raw formula rounds to D=0; the API clamps to >= 1
+    assert required_features_for_pairs(k, 0.5, 8, 1e9, 10, 0.05) == 1
 
 
 def test_eps_at_monotone_in_budget():

@@ -260,3 +260,106 @@ def test_edge_noncontiguous_and_uneven_chunks(name):
         jnp.asarray(X), row_chunk=5)
     np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# progressive growth (core.doubling): every family must double its budget
+# without redrawing — the prefix-identity contract docs/adaptive.md names
+# ---------------------------------------------------------------------------
+from repro.core import GrowableFeatureMap, make_growable_feature_map  # noqa: E402
+
+
+def _growable(name, **kw):
+    kw.setdefault("base_features", 48)
+    kw.setdefault("measure", "proportional")
+    return make_growable_feature_map(KERN, 10, jax.random.PRNGKey(5),
+                                     estimator=name, **kw)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_growth_prefix_bit_identical(name):
+    """grow() appends generations; the raw feature prefix is BIT-identical
+    (np.array_equal, not allclose) and the rescaled output differs from it
+    by exactly the one global 1/sqrt(G) multiply."""
+    gm = _growable(name)
+    X = jax.random.normal(jax.random.PRNGKey(6), (5, 10)) * 0.3
+    raw1 = np.asarray(gm.apply(X, rescale=False, use_pallas=False))
+    g2 = gm.grow()
+    g4 = g2.grow()
+    assert (g2.n_generations, g4.n_generations) == (2, 4)
+    raw2 = np.asarray(g2.apply(X, rescale=False, use_pallas=False))
+    raw4 = np.asarray(g4.apply(X, rescale=False, use_pallas=False))
+    assert raw2.shape[1] == 2 * raw1.shape[1]
+    assert np.array_equal(raw2[:, :raw1.shape[1]], raw1)
+    assert np.array_equal(raw4[:, :raw2.shape[1]], raw2)
+    # growth path independence: 1 -> 4 directly equals 1 -> 2 -> 4
+    direct = gm.grow_to_generations(4)
+    assert np.array_equal(
+        np.asarray(direct.apply(X, rescale=False, use_pallas=False)), raw4)
+    # the scaled output is raw * 1/sqrt(G), nothing else
+    scaled = np.asarray(g4.apply(X, use_pallas=False))
+    np.testing.assert_allclose(scaled, raw4 / np.sqrt(4.0),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_growth_eps_monotone_and_gram(name):
+    """eps_at tightens with every doubling, and the generation-summed Gram
+    still estimates the kernel (sanity: error shrinks or holds as G grows,
+    up to sampling noise at these tiny budgets)."""
+    gm = _growable(name)
+    X = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (6, 10)) * 0.3)
+    eps = [gm.eps_at(0.05)]
+    maps = [gm]
+    for _ in range(3):
+        maps.append(maps[-1].grow())
+        eps.append(maps[-1].eps_at(0.05))
+    assert all(b < a for a, b in zip(eps, eps[1:])), eps
+    # estimate_gram == the scaled features' explicit Gram
+    g = maps[2]
+    Z = np.asarray(g.apply(X, use_pallas=False))
+    G_est = np.asarray(g.estimate_gram(X, use_pallas=False))
+    np.testing.assert_allclose(G_est, Z @ Z.T, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_growth_json_round_trip(name):
+    """to_json stores (plan, key, G) only; from_json redraws the stacked
+    params bit-identically — growth state is exactly reproducible
+    cross-host."""
+    gm = _growable(name).grow_to_generations(3)
+    rt = GrowableFeatureMap.from_json(gm.to_json(), kernel=KERN)
+    assert rt.n_generations == 3
+    assert rt.plan == gm.plan
+    X = jax.random.normal(jax.random.PRNGKey(8), (4, 10)) * 0.3
+    assert np.array_equal(
+        np.asarray(rt.apply(X, rescale=False, use_pallas=False)),
+        np.asarray(gm.apply(X, rescale=False, use_pallas=False)))
+    # the bound context survives the trip
+    assert rt.eps_at(0.05) == pytest.approx(gm.eps_at(0.05))
+    # without a kernel the bound side fails LOUDLY, the map still applies
+    bare = GrowableFeatureMap.from_json(gm.to_json())
+    with pytest.raises(ValueError, match="kernel"):
+        bare.eps_at(0.05)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_growth_matches_sharded_layout(name):
+    """A G-generation growable map computes the SAME raw feature layout as
+    the distributed S=G shard draw — growth and sharding are one fold_in
+    contract (distributed/estimator.py)."""
+    from repro.distributed.estimator import shard_init_params
+
+    gm = _growable(name).grow_to_generations(2)
+    est = registry.get(name)
+    X = jax.random.normal(jax.random.PRNGKey(9), (3, 10)) * 0.3
+    stacked = shard_init_params(name, gm.plan,
+                                jnp.asarray(gm.key_data, jnp.uint32), 2)
+    parts = []
+    for s in range(2):
+        p = jax.tree_util.tree_map(lambda a: a[s], stacked)
+        parts.append(np.asarray(est.apply(gm.plan, p, X,
+                                          use_pallas=False)))
+    want = np.concatenate(parts, axis=-1)
+    got = np.asarray(gm.apply(X, rescale=False, use_pallas=False))
+    assert np.array_equal(got, want)
